@@ -1,0 +1,74 @@
+"""Paper Figs. 8-9 / Table 7 analogue: the two Monte-Carlo case studies.
+
+pi estimation and Black-Scholes option pricing, each in two builds:
+  * thundering — ThundeRiNG ctr pipeline fused into the integrand
+    (the kernels' ref path: generation never leaves registers/VMEM)
+  * vendor    — the same integrand drawing from jax.random (threefry),
+    the 'cuRAND equivalent' on this substrate.
+
+Reported: wall time, throughput, and |error| vs the analytic value —
+matching the paper's accuracy-at-throughput story.
+"""
+from __future__ import annotations
+
+import functools
+from math import erf, exp, log, pi, sqrt
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.kernels import ops
+
+LANES = 2048
+DRAWS = 2048  # per lane -> 4.2M draws total
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _pi_vendor(n: int):
+    key = jax.random.PRNGKey(0)
+    xy = jax.random.uniform(key, (2, n))
+    inside = jnp.sum((xy[0] ** 2 + xy[1] ** 2) < 1.0)
+    return 4.0 * inside / n
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _opt_vendor(n: int, s0=100.0, k=100.0, r=0.05, sigma=0.2, t=1.0):
+    key = jax.random.PRNGKey(1)
+    z = jax.random.normal(key, (n,))
+    st = s0 * jnp.exp((r - sigma ** 2 / 2) * t + sigma * jnp.sqrt(t) * z)
+    return jnp.mean(jnp.maximum(st - k, 0.0)) * jnp.exp(-r * t)
+
+
+def _bs_closed(s0=100.0, k=100.0, r=0.05, sigma=0.2, t=1.0):
+    d1 = (log(s0 / k) + (r + sigma ** 2 / 2) * t) / (sigma * sqrt(t))
+    d2 = d1 - sigma * sqrt(t)
+    N = lambda x: 0.5 * (1 + erf(x / sqrt(2)))
+    return s0 * N(d1) - k * exp(-r * t) * N(d2)
+
+
+def run(out):
+    n = LANES * DRAWS
+    # pi
+    f_t = functools.partial(ops.estimate_pi, seed=5, num_lanes=LANES,
+                            draws_per_lane=DRAWS, use_kernel=False)
+    sec = time_fn(lambda: f_t(), iters=3)
+    est = float(f_t())
+    out(row("apps/pi/thundering", sec * 1e6,
+            f"{n / sec / 1e6:.1f} Mdraw/s err={abs(est - pi):.2e}"))
+    sec = time_fn(_pi_vendor, n, iters=3)
+    est = float(_pi_vendor(n))
+    out(row("apps/pi/vendor_threefry", sec * 1e6,
+            f"{n / sec / 1e6:.1f} Mdraw/s err={abs(est - pi):.2e}"))
+    # option pricing
+    bs = _bs_closed()
+    f_o = functools.partial(ops.price_option, seed=5, num_lanes=LANES,
+                            draws_per_lane=DRAWS, use_kernel=False)
+    sec = time_fn(lambda: f_o(), iters=3)
+    est = float(f_o())
+    out(row("apps/option/thundering", sec * 1e6,
+            f"{n / sec / 1e6:.1f} Mdraw/s err={abs(est - bs) / bs:.2e}"))
+    sec = time_fn(_opt_vendor, n, iters=3)
+    est = float(_opt_vendor(n))
+    out(row("apps/option/vendor_threefry", sec * 1e6,
+            f"{n / sec / 1e6:.1f} Mdraw/s err={abs(est - bs) / bs:.2e}"))

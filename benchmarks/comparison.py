@@ -1,0 +1,52 @@
+"""Paper Tables 5-6 analogue: ThundeRiNG vs the baseline PRNGs, all
+implemented in this repo's JAX substrate and run on the same host.
+
+The paper's table compares FPGA/GPU devices; the portable comparison here
+is algorithmic cost per sample on identical hardware: ThundeRiNG's
+counter mode is a pure map (like philox) with a *shared* root recurrence,
+vs philox's 10-round per-sample block cipher and the serial scan
+generators (xoroshiro / pcg), whose time dimension cannot parallelize.
+We also compare against jax.random (threefry — the 'vendor library').
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import baselines
+from repro.kernels import ops
+
+S, T = 1024, 4096
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _gen(kind: str):
+    if kind == "thundering":
+        return ops.thundering_bulk(seed=1, num_streams=S, num_steps=T,
+                                   mode="ctr", use_kernel=False)
+    if kind == "philox":
+        return baselines.philox_bits(1, S, T)
+    if kind == "xoroshiro":
+        return baselines.xoroshiro_bits(1, S, T)
+    if kind == "pcg_xsh_rs":
+        return baselines.pcg_xsh_rs_bits(1, S, T)
+    if kind == "jax_threefry":
+        return jax.random.bits(jax.random.PRNGKey(0), (S, T), jnp.uint32)
+    raise ValueError(kind)
+
+
+def run(out):
+    base = None
+    for kind in ("thundering", "philox", "xoroshiro", "pcg_xsh_rs",
+                 "jax_threefry"):
+        sec = time_fn(_gen, kind, iters=3)
+        gs = S * T / sec / 1e9
+        if base is None:
+            base = sec
+        out(row(f"comparison/{kind}", sec * 1e6,
+                f"{gs:.3f} GSample/s speedup_vs_thundering="
+                f"{sec / base:.2f}x_slower" if kind != "thundering"
+                else f"{gs:.3f} GSample/s (reference)"))

@@ -1,0 +1,43 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by ``repro.launch.dryrun``) and
+emits one row per (arch x shape x mesh) with the three roofline terms,
+the dominant bottleneck and the useful-flops ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(out):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        out(row("roofline/none", 0.0,
+                "no dry-run artifacts; run python -m repro.launch.dryrun"))
+        return
+    for f in files:
+        with open(f) as fh:
+            rep = json.load(fh)
+        tag = os.path.basename(f)[:-5]
+        if rep.get("skipped"):
+            out(row(f"roofline/{tag}", 0.0, "SKIP " + rep["skipped"][:60]))
+            continue
+        if rep.get("error"):
+            out(row(f"roofline/{tag}", 0.0, "FAIL " + rep["error"][:80]))
+            continue
+        r = rep["roofline"]
+        mem = rep["memory"].get("total_bytes_per_device", 0) / 2 ** 30
+        out(row(
+            f"roofline/{tag}", 0.0,
+            f"compute={r['compute_s'] * 1e3:.1f}ms"
+            f" memory={r['memory_s'] * 1e3:.1f}ms"
+            f" collective={r['collective_s'] * 1e3:.1f}ms"
+            f" bottleneck={r['bottleneck'].replace('_s', '')}"
+            f" useful_ratio={r['useful_flops_ratio']:.2f}"
+            f" mem/dev={mem:.2f}GiB"))

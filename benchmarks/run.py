@@ -1,0 +1,39 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import apps, comparison, quality, roofline, throughput
+
+    rows = []
+
+    def out(line: str):
+        rows.append(line)
+        print(line, flush=True)
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("quality", quality.run),          # Tables 2/3/4
+        ("throughput", throughput.run),    # Figs 5/6
+        ("comparison", comparison.run),    # Tables 5/6
+        ("apps", apps.run),                # Figs 8/9 + Table 7
+        ("roofline", roofline.run),        # deliverable (g)
+    ]
+    t0 = time.time()
+    failures = 0
+    for name, fn in suites:
+        try:
+            fn(out)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            out(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+    print(f"# {len(rows)} rows in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

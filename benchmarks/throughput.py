@@ -1,0 +1,56 @@
+"""Paper Figs. 5-6 analogue: bulk MISRN throughput vs number of stream
+instances.
+
+The paper scales SOU instances on a U250 (up to 655 Gnum/s).  Here the
+jnp reference path (the same arithmetic the Pallas kernel runs per tile)
+executes on the host CPU; the figure of merit is throughput scaling with
+S (the state-sharing claim: cost per stream is one add + output stage —
+adding streams must scale ~linearly until bandwidth saturates) plus the
+projected TPU bound (bulk generation writes 4 B/sample; one v5e chip at
+819 GB/s is HBM-bound at ~205 Gsample/s; the fused-consumer kernels in
+benchmarks/apps.py beat that by never writing the samples).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.kernels import ops
+
+T_STEPS = 4096
+HBM_BW = 819e9
+
+
+@functools.partial(jax.jit, static_argnames=("s", "t", "mode", "deco"))
+def _bulk(s: int, t: int, mode: str, deco: str = "splitmix64"):
+    return ops.thundering_bulk(seed=7, num_streams=s, num_steps=t,
+                               mode=mode, use_kernel=False, deco=deco)
+
+
+def run(out):
+    prev = None
+    for s in (128, 512, 2048, 8192):
+        sec = time_fn(_bulk, s, T_STEPS, "ctr", iters=3)
+        samples = s * T_STEPS
+        gs = samples / sec / 1e9
+        scale = f" x{gs / prev:.2f}" if prev else ""
+        prev = gs
+        out(row(f"throughput/ctr/S={s}", sec * 1e6,
+                f"{gs:.3f} GSample/s host{scale}"))
+    # faithful mode (serial xorshift decorrelator) at one size
+    sec = time_fn(_bulk, 512, T_STEPS, "faithful", iters=3)
+    gs = 512 * T_STEPS / sec / 1e9
+    out(row("throughput/faithful/S=512", sec * 1e6,
+            f"{gs:.3f} GSample/s host"))
+    # fmix32 decorrelator (beyond-paper; 96 -> 30 uint ops/sample)
+    sec64 = time_fn(_bulk, 2048, T_STEPS, "ctr", iters=3)
+    sec32 = time_fn(_bulk, 2048, T_STEPS, "ctr", "fmix32", iters=3)
+    gs = 2048 * T_STEPS / sec32 / 1e9
+    out(row("throughput/ctr_fmix32/S=2048", sec32 * 1e6,
+            f"{gs:.3f} GSample/s host x{sec64 / sec32:.2f} vs splitmix64"))
+    out(row("throughput/tpu_projection", 0.0,
+            f"bulk HBM-bound {HBM_BW / 4 / 1e9:.0f} GSample/s/chip;"
+            f" paper FPGA 655 Gnum/s"))

@@ -1,0 +1,48 @@
+"""Paper case study 1 (Sec. 6 / Fig. 8): Monte-Carlo estimation of pi.
+
+Sweeps the number of draws like the paper's figure; reports estimate,
+error and throughput for the ThundeRiNG-fused path and a jax.random
+baseline.
+
+  PYTHONPATH=src python examples/monte_carlo_pi.py
+"""
+import time
+from math import pi
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def vendor_pi(n):
+    key = jax.random.PRNGKey(0)
+    xy = jax.random.uniform(key, (2, n))
+    return 4.0 * jnp.sum((xy[0] ** 2 + xy[1] ** 2) < 1.0) / n
+
+
+def main():
+    print(f"{'draws':>12} {'estimate':>10} {'|err|':>9} {'Mdraw/s':>9}")
+    for draws_per_lane in (256, 1024, 4096):
+        lanes = 1024
+        n = lanes * draws_per_lane
+        f = lambda: ops.estimate_pi(seed=7, num_lanes=lanes,
+                                    draws_per_lane=draws_per_lane,
+                                    use_kernel=False)
+        f()  # compile
+        t0 = time.perf_counter()
+        est = float(f())
+        dt = time.perf_counter() - t0
+        print(f"{n:12d} {est:10.6f} {abs(est - pi):9.2e} "
+              f"{n / dt / 1e6:9.1f}  (thundering)")
+    n = 1024 * 4096
+    jax.block_until_ready(vendor_pi(n))
+    t0 = time.perf_counter()
+    est = float(vendor_pi(n))
+    dt = time.perf_counter() - t0
+    print(f"{n:12d} {est:10.6f} {abs(est - pi):9.2e} "
+          f"{n / dt / 1e6:9.1f}  (jax.random baseline)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Generate EXPERIMENTS.md markdown tables from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+
+
+def fmt_b(n):
+    return f"{n / 2**30:.2f}"
+
+
+def main():
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        with open(f) as fh:
+            rep = json.load(fh)
+        tag = os.path.basename(f)[:-5]
+        parts = tag.split("__")
+        rep["_tag"] = tag
+        rep["_mesh_kind"] = parts[2] if len(parts) > 2 else "?"
+        rows.append(rep)
+
+    # --- dry-run table (both meshes) ---
+    print("### Dry-run matrix\n")
+    print("| arch | shape | mesh | status | mem/dev GiB | compile s | HLO lines |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "__" not in r["_tag"] or r["_tag"].count("__") > 2:
+            continue
+        arch, shape = r["arch"], r["shape"]
+        mesh = r.get("mesh", "-")
+        if r.get("skipped"):
+            print(f"| {arch} | {shape} | {r['_mesh_kind']} | SKIP (full attention) | - | - | - |")
+            continue
+        if r.get("error"):
+            print(f"| {arch} | {shape} | {mesh} | FAIL | - | - | - |")
+            continue
+        mem = fmt_b(r["memory"]["total_bytes_per_device"])
+        print(f"| {arch} | {shape} | {mesh} | OK | {mem} | "
+              f"{r['compile_s']} | {r.get('hlo_lines', '-')} |")
+
+    # --- roofline table (single-pod only) ---
+    print("\n### Roofline (single-pod 16x16, per-chip terms)\n")
+    print("| arch | shape | compute s | memory s | collective s | bottleneck |"
+          " MODEL_FLOPS | useful ratio | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["_mesh_kind"] != "pod" or r.get("skipped") or r.get("error"):
+            continue
+        if "roofline" not in r or "cost_fit" not in r:
+            continue
+        rf = r["roofline"]
+        dom = rf["bottleneck"].replace("_s", "")
+        note = {
+            "compute": "raise MFU: fuse/bf16",
+            "memory": "cut bytes: fusion, flash-attn kernel, bf16 params",
+            "collective": "cut comm: bf16 gathers, overlap, EP layout",
+        }[dom]
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} | "
+              f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | {dom} | "
+              f"{rf['model_flops_total']:.2e} | "
+              f"{rf['useful_flops_ratio']:.2f} | {note} |")
+
+
+if __name__ == "__main__":
+    main()

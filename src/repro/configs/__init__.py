@@ -1,0 +1,6 @@
+"""Assigned architecture configs (exact published dims) + input shapes."""
+from repro.configs.base import (ARCH_IDS, SHAPES, get_config, input_specs,
+                                runnable_cells, shape_skipped)
+
+__all__ = ["ARCH_IDS", "SHAPES", "get_config", "input_specs",
+           "runnable_cells", "shape_skipped"]

@@ -1,0 +1,8 @@
+"""olmoe-1b-7b [moe]: 16L d2048 16H (kv=16) expert_ff=1024 vocab50304,
+MoE 64 experts top-8.  [arXiv:2409.02060; hf]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b", family="moe", n_layers=16, d_model=2048,
+    n_heads=16, n_kv_heads=16, d_ff=1024, vocab=50304, act="silu",
+    n_experts=64, top_k=8, rope_theta=10000.0)

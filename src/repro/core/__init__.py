@@ -1,0 +1,19 @@
+"""repro.core — ThundeRiNG MISRN: the paper's contribution as a JAX module.
+
+Public surface:
+  * ``ThunderStream`` + ``new_stream``/``derive``/``split``/``advance`` and
+    the samplers (``random_bits``/``uniform``/``normal``/``bernoulli``/
+    ``gumbel``/``categorical``) — the framework-facing splittable RNG.
+  * ``repro.kernels.ops`` — bulk S-streams x T-steps block generation
+    (Pallas kernel on TPU, jnp reference elsewhere).
+  * ``baselines`` / ``statistics`` / ``golden`` — comparison generators,
+    the statistical battery, and the numpy oracle.
+"""
+from repro.core.stream import (ThunderStream, advance, bernoulli, categorical,
+                               derive, gumbel, new_stream, normal, random_bits,
+                               split, uniform)
+
+__all__ = [
+    "ThunderStream", "new_stream", "derive", "split", "advance",
+    "random_bits", "uniform", "normal", "bernoulli", "gumbel", "categorical",
+]

@@ -1,0 +1,205 @@
+"""Baseline PRNGs the paper compares against (Table 1 / 5 / 6), in JAX.
+
+All in u32-limb arithmetic so they run on TPU (and under Pallas interpret
+mode) exactly like the ThundeRiNG path:
+
+  * philox4x32-10  (Salmon et al. 2011)    — counter-based, crush-resistant
+  * xoroshiro128** (Blackman & Vigna 2018) — sequential, crush-resistant
+  * pcg_xsh_rs_64  (O'Neill 2014)          — sequential LCG + XSH-RS
+  * raw_lcg        (truncation output only) — the paper's correlation
+    strawman (Table 3 "LCG Baseline")
+
+Sequential generators expose a vectorized multi-stream step (one step for S
+parallel instances) plus a scan-based block generator; philox is a pure map
+over counters.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lcg, u64
+from repro.core.u64 import U32, U64Pair
+
+# ----------------------------------------------------------------------------
+# Philox 4x32-10
+# ----------------------------------------------------------------------------
+
+_PHILOX_M0 = U32(0xD2511F53)
+_PHILOX_M1 = U32(0xCD9E8D57)
+_PHILOX_W0 = U32(0x9E3779B9)
+_PHILOX_W1 = U32(0xBB67AE85)
+
+
+def philox4x32(counter: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray],
+               key: Tuple[jnp.ndarray, jnp.ndarray],
+               rounds: int = 10):
+    """Philox4x32 block: 4 uint32 outputs per (counter, key)."""
+    c0, c1, c2, c3 = (c.astype(U32) for c in counter)
+    k0, k1 = (k.astype(U32) for k in key)
+    for _ in range(rounds):
+        hi0, lo0 = u64.mul32_wide(_PHILOX_M0, c0)
+        hi1, lo1 = u64.mul32_wide(_PHILOX_M1, c2)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+        k0 = k0 + _PHILOX_W0
+        k1 = k1 + _PHILOX_W1
+    return c0, c1, c2, c3
+
+
+def philox_bits(seed: int, num_streams: int, num_steps: int) -> jnp.ndarray:
+    """(num_streams, num_steps) uint32; stream = key, step block = counter."""
+    assert num_steps % 4 == 0, "philox emits 4 words per block"
+    nblk = num_steps // 4
+    sid = jnp.arange(num_streams, dtype=U32)[:, None]
+    blk = jnp.arange(nblk, dtype=U32)[None, :]
+    zeros = jnp.zeros_like(sid * blk)
+    c = (blk + zeros, zeros, zeros, zeros)
+    key = (sid + zeros, jnp.full_like(zeros, U32(seed & 0xFFFFFFFF)))
+    o0, o1, o2, o3 = philox4x32(c, key)
+    out = jnp.stack([o0, o1, o2, o3], axis=-1)
+    return out.reshape(num_streams, num_steps)
+
+
+# ----------------------------------------------------------------------------
+# xoroshiro128**
+# ----------------------------------------------------------------------------
+
+def _rotl64(x: U64Pair, k: int) -> U64Pair:
+    return u64.xor64(u64.shl64(x, k), u64.shr64(x, 64 - k))
+
+
+def _rotl64_or(x: U64Pair, k: int) -> U64Pair:
+    a = u64.shl64(x, k)
+    b = u64.shr64(x, 64 - k)
+    return a[0] | b[0], a[1] | b[1]
+
+
+def xoroshiro_step(s0: U64Pair, s1: U64Pair):
+    """One xoroshiro128** step -> (new_s0, new_s1, out32).
+
+    out64 = rotl(s0 * 5, 7) * 9; we emit its high 32 bits.
+    """
+    five = u64.const64(5)
+    nine = u64.const64(9)
+    r = u64.mul64(_rotl64_or(u64.mul64(s0, five), 7), nine)
+    s1x = u64.xor64(s1, s0)
+    new_s0 = u64.xor64(u64.xor64(_rotl64_or(s0, 24), s1x), u64.shl64(s1x, 16))
+    new_s1 = _rotl64_or(s1x, 37)
+    return new_s0, new_s1, r[0]
+
+
+def xoroshiro_bits(seed: int, num_streams: int, num_steps: int) -> jnp.ndarray:
+    """(num_streams, num_steps) via scan; streams seeded by splitmix."""
+    from repro.core import splitmix
+    sid = jnp.arange(num_streams, dtype=U32)
+    seed_pair = u64.const64(seed)
+    s0 = splitmix.splitmix64((jnp.broadcast_to(seed_pair[0], sid.shape),
+                              jnp.broadcast_to(seed_pair[1], sid.shape)),
+                             (jnp.zeros_like(sid), sid))
+    s1 = splitmix.splitmix64(s0, (jnp.zeros_like(sid), sid + U32(7)))
+
+    def body(carry, _):
+        s0, s1 = carry
+        s0, s1, out = xoroshiro_step(s0, s1)
+        return (s0, s1), out
+
+    _, outs = jax.lax.scan(body, (s0, s1), None, length=num_steps)
+    return outs.T  # (streams, steps)
+
+
+# ----------------------------------------------------------------------------
+# PCG XSH-RS 64/32 (multistream via odd increments)
+# ----------------------------------------------------------------------------
+
+def _shr64_dyn32(x: U64Pair, n: jnp.ndarray) -> jnp.ndarray:
+    """low 32 bits of (x >> n) for dynamic 0 < n < 32."""
+    hi, lo = x
+    n = n.astype(U32)
+    return (lo >> n) | (hi << (U32(32) - n))
+
+
+def pcg_xsh_rs_out(state: U64Pair) -> jnp.ndarray:
+    """XSH-RS output: uint32((state ^ (state >> 22)) >> (22 + (state >> 61)))."""
+    x = u64.xor64(state, u64.shr64(state, 22))
+    count = (state[0] >> U32(29)) + U32(22)  # state>>61 == hi>>29
+    return _shr64_dyn32(x, count)
+
+
+def pcg_xsh_rs_bits(seed: int, num_streams: int, num_steps: int) -> jnp.ndarray:
+    from repro.core import splitmix
+    sid = jnp.arange(num_streams, dtype=U32)
+    seed_pair = u64.const64(seed)
+    st = splitmix.splitmix64((jnp.broadcast_to(seed_pair[0], sid.shape),
+                              jnp.broadcast_to(seed_pair[1], sid.shape)),
+                             (jnp.zeros_like(sid), sid))
+    # per-stream odd increment (multistream)
+    inc = splitmix.splitmix64(st, (jnp.zeros_like(sid), sid ^ U32(0xDECAF)))
+    inc = (inc[0], inc[1] | U32(1))
+    a = u64.const64(lcg.MULTIPLIER)
+
+    def body(carry, _):
+        s = carry
+        new = u64.add64(u64.mul64((jnp.broadcast_to(a[0], s[0].shape),
+                                   jnp.broadcast_to(a[1], s[1].shape)), s), inc)
+        return new, pcg_xsh_rs_out(s)
+
+    _, outs = jax.lax.scan(body, st, None, length=num_steps)
+    return outs.T
+
+
+# ----------------------------------------------------------------------------
+# Raw LCG (correlation strawman)
+# ----------------------------------------------------------------------------
+
+def raw_lcg_bits(seed: int, num_streams: int, num_steps: int,
+                 permute: bool = False, h_mode: str = "adjacent"
+                 ) -> jnp.ndarray:
+    """Increment-parameterized LCG streams with NO decorrelation (and
+    optionally no permutation): the paper's Table 3/4 ablation baselines.
+
+    Streams share the multiplier, differ only in increment/leaf offset.
+
+    ``h_mode``:
+      * "adjacent" — h = 2i (tiny adjacent offsets).  The worst case the
+        paper's Table 3 "LCG Baseline" column exhibits (Pearson ~0.998):
+        truncated outputs are near-identical, and even the permuted outputs
+        keep near-perfect Hamming-weight dependency (Table 4's point that
+        permutation alone does not decorrelate).
+      * "spread" — h derived by splitmix (even), matching ThundeRiNG's own
+        offset derivation: isolates the decorrelator's contribution from h
+        spacing (the Table 3 "LCG + Permutation" column regime).
+    """
+    from repro.core import splitmix
+    x0 = u64.const64(seed | 1)
+    a = u64.const64(lcg.MULTIPLIER)
+    c = u64.const64(lcg.DEFAULT_INCREMENT)
+    sid = jnp.arange(num_streams, dtype=U32)
+    if h_mode == "adjacent":
+        h = (sid >> U32(31), sid << U32(1))  # h = 2i, even
+    elif h_mode == "spread":
+        seed_pair = u64.const64(seed)
+        mixed = splitmix.splitmix64(
+            (jnp.broadcast_to(seed_pair[0], sid.shape),
+             jnp.broadcast_to(seed_pair[1], sid.shape)),
+            (jnp.zeros_like(sid), sid))
+        h = u64.shl64(mixed, 1)  # even
+    else:
+        raise ValueError(h_mode)
+
+    def body(carry, _):
+        s = carry
+        new = u64.add64(u64.mul64((jnp.broadcast_to(a[0], (num_streams,)),
+                                   jnp.broadcast_to(a[1], (num_streams,))),
+                                  (jnp.broadcast_to(s[0], (num_streams,)),
+                                   jnp.broadcast_to(s[1], (num_streams,)))),
+                        (jnp.broadcast_to(c[0], (num_streams,)),
+                         jnp.broadcast_to(c[1], (num_streams,))))
+        # all streams share the root; per-stream leaf add
+        leaf = u64.add64(new, h)
+        out = lcg.xsh_rr(leaf) if permute else lcg.truncate_hi(leaf)
+        return (new[0][0], new[1][0]), out
+
+    (_, _), outs = jax.lax.scan(body, (x0[0], x0[1]), None, length=num_steps)
+    return outs.T

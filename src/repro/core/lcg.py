@@ -1,0 +1,204 @@
+"""Linear congruential generator core with ThundeRiNG state sharing.
+
+The paper's root/leaf decomposition (Sec. 3.3):
+
+  root transition   x_{n+1} = (a * x_n + c)      mod 2**64      (1 multiply)
+  leaf transition   w_n^i   = (x_n + h_i)        mod 2**64      (1 add each)
+
+Each leaf stream i is itself an LCG of the same multiplier with effective
+increment ``c_i = (c + h_i - a*h_i) mod 2**64`` (Eq. 21/22).  The
+Hull-Dobell maximum-period condition requires ``c_i`` odd; with odd ``a``
+and odd ``c`` it suffices to pick EVEN ``h_i`` (Sec. 3.3), which we enforce.
+
+TPU adaptation of the FPGA advance-``i`` trick (Sec. 4.2): the paper runs 6
+staggered state generators to hide DSP latency.  On TPU we use the same
+jump-ahead algebra (Brown 1994) to express a whole *vector* of future root
+states as one fused affine map,
+
+  x_{n+t} = A_t * x_n + C_t,   A_t = a^t,  C_t = c * (a^t - 1) / (a - 1),
+
+with per-lane constants (A_t, C_t) precomputed at trace time.  A block of
+``T`` time steps shared over ``S`` leaf streams therefore costs ``T`` vector
+multiplies + ``S*T`` adds — the paper's "one multiplier for any number of
+instances", reinterpreted for a 8x128-lane VPU.
+
+NOTE on the paper's parameters: Sec. 5.1.2 says ``c = 54``, but an even
+``c`` violates the paper's own Hull-Dobell argument in Sec. 3.3 (odd
+increment required for full period).  The value 54 is the *stream id* from
+O'Neill's pcg32 demo (where the increment becomes ``(54 << 1) | 1``).  We
+default
+to the PCG64 reference increment and expose ``c`` as a parameter; any odd
+``c`` is accepted.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import u64
+from repro.core.u64 import U32, U64Pair
+
+# PCG64 / Knuth MMIX multiplier, as used by the paper (Sec. 5.1.2).
+MULTIPLIER = 6364136223846793005
+# PCG64 reference increment (odd; see module docstring for why not 54).
+DEFAULT_INCREMENT = 1442695040888963407
+MODULUS_BITS = 64
+
+
+def lcg_step(state: U64Pair, a: U64Pair, c: U64Pair) -> U64Pair:
+    """x -> (a*x + c) mod 2**64, all limb pairs."""
+    return u64.add64(u64.mul64(a, state), c)
+
+
+def leaf_transition(root: U64Pair, h: U64Pair) -> U64Pair:
+    """ThundeRiNG leaf: w = (x + h) mod 2**64. h must be even (see module doc)."""
+    return u64.add64(root, h)
+
+
+def effective_increment(a: int, c: int, h: int) -> int:
+    """Increment of the leaf stream as an ordinary LCG (Eq. 21)."""
+    return (c + h - a * h) % (1 << 64)
+
+
+def lcg_skip(n: int, a: int = MULTIPLIER, c: int = DEFAULT_INCREMENT) -> Tuple[int, int]:
+    """Brown's O(log n) jump-ahead: returns (A, C) with x_{k+n} = A*x_k + C.
+
+    Host-side exact version over python ints (the paper computes these at
+    compile time, Sec. 4.2); ``n`` may be any non-negative int (mod 2**64
+    period assumed).
+    """
+    m = 1 << 64
+    A, C = 1, 0
+    cur_a, cur_c = a % m, c % m
+    n = int(n)
+    while n > 0:
+        if n & 1:
+            A = (A * cur_a) % m
+            C = (C * cur_a + cur_c) % m
+        cur_c = ((cur_a + 1) * cur_c) % m
+        cur_a = (cur_a * cur_a) % m
+        n >>= 1
+    return A, C
+
+
+def lcg_skip_traced(n: U64Pair, a: int = MULTIPLIER, c: int = DEFAULT_INCREMENT
+                    ) -> Tuple[U64Pair, U64Pair]:
+    """Traced jump-ahead for dynamic offsets (64-iteration fori_loop).
+
+    ``n`` is a (hi, lo) uint32 pair (possibly vectors).  Returns traced
+    (A, C) limb pairs such that x_{k+n} = A*x_k + C elementwise.
+    """
+    nh, nl = n
+    one = (jnp.zeros_like(nh), jnp.ones_like(nl))
+    zero = (jnp.zeros_like(nh), jnp.zeros_like(nl))
+
+    a0 = u64.const64(a)
+    c0 = u64.const64(c)
+    # Broadcast constants against n's shape.
+    cur_a = (jnp.broadcast_to(a0[0], nh.shape).astype(U32),
+             jnp.broadcast_to(a0[1], nl.shape).astype(U32))
+    cur_c = (jnp.broadcast_to(c0[0], nh.shape).astype(U32),
+             jnp.broadcast_to(c0[1], nl.shape).astype(U32))
+
+    def body(i, carry):
+        A, C, cur_a, cur_c = carry
+        # bit i of n: from lo for i < 32 else hi
+        bit = jnp.where(i < 32, (nl >> i.astype(U32)) & U32(1),
+                        (nh >> (i.astype(U32) - U32(32))) & U32(1)).astype(bool)
+
+        newA = u64.mul64(A, cur_a)
+        newC = u64.add64(u64.mul64(C, cur_a), cur_c)
+        A = (jnp.where(bit, newA[0], A[0]), jnp.where(bit, newA[1], A[1]))
+        C = (jnp.where(bit, newC[0], C[0]), jnp.where(bit, newC[1], C[1]))
+
+        cur_c = u64.mul64(u64.add64(cur_a, one), cur_c)
+        cur_a = u64.mul64(cur_a, cur_a)
+        return A, C, cur_a, cur_c
+
+    A, C, _, _ = jax.lax.fori_loop(0, 64, body, (one, zero, cur_a, cur_c))
+    return A, C
+
+
+@functools.lru_cache(maxsize=None)
+def block_affine_constants(block_len: int, a: int = MULTIPLIER,
+                           c: int = DEFAULT_INCREMENT):
+    """(A_t, C_t) for t in [0, block_len) as numpy uint32 arrays.
+
+    Used by kernels to expand one scalar root state into ``block_len``
+    consecutive root states with a single vector multiply-add — the TPU
+    analogue of the paper's six staggered advance-6 generators.
+
+    Returns (A_hi, A_lo, C_hi, C_lo), each shape (block_len,) uint32.
+    """
+    import numpy as np
+
+    A_hi = np.empty(block_len, np.uint32)
+    A_lo = np.empty(block_len, np.uint32)
+    C_hi = np.empty(block_len, np.uint32)
+    C_lo = np.empty(block_len, np.uint32)
+    for t in range(block_len):
+        A, C = lcg_skip(t, a, c)
+        A_hi[t], A_lo[t] = u64.split64(A)
+        C_hi[t], C_lo[t] = u64.split64(C)
+    return A_hi, A_lo, C_hi, C_lo
+
+
+def root_states_vector(x0: U64Pair, ctr: U64Pair, n: int,
+                       block: int = 256) -> U64Pair:
+    """Root states for positions ctr+1 .. ctr+n as (hi, lo) of shape (n,).
+
+    Two-level jump-ahead (the TPU re-interpretation of the paper's staggered
+    advance-6 RSGU): position t = q*block + r.  Block starts are
+    jump-computed on a (Q,)-vector (one 64-iteration fori amortized over
+    ``block`` elements); within a block the (A_r, C_r) tables are trace-time
+    constants, so the per-element cost is a single fused multiply-add — the
+    paper's shared-root-multiply, vectorized over VPU lanes.
+    """
+    import math
+
+    q = -(-n // block)  # ceil
+    assert block & (block - 1) == 0, "block must be a power of two"
+    # base = x0 advanced by ctr (dynamic): A(ctr) x0 + C(ctr)
+    A, C = lcg_skip_traced(ctr)
+    base = u64.add64(u64.mul64(A, x0), C)
+    # block starts: base advanced by q*block for q = 0..Q-1 (dynamic vector)
+    q_idx = jnp.arange(q, dtype=U32)
+    shift = int(math.log2(block))
+    n_lo = q_idx << shift
+    n_hi = q_idx >> (32 - shift)
+    Aq, Cq = lcg_skip_traced((n_hi, n_lo))
+    starts = u64.add64(u64.mul64(Aq, (jnp.broadcast_to(base[0], (q,)),
+                                      jnp.broadcast_to(base[1], (q,)))), Cq)
+    # within-block: states[q, r] = A_{r+1} * starts[q] + C_{r+1}
+    A_hi, A_lo, C_hi, C_lo = block_affine_constants(block + 1)
+    Ar = (jnp.asarray(A_hi[1:]), jnp.asarray(A_lo[1:]))  # advance by r+1
+    Cr = (jnp.asarray(C_hi[1:]), jnp.asarray(C_lo[1:]))
+    sh = (starts[0][:, None], starts[1][:, None])
+    rh = (Ar[0][None, :], Ar[1][None, :])
+    states = u64.add64(u64.mul64(rh, sh), (Cr[0][None, :], Cr[1][None, :]))
+    hi = states[0].reshape(-1)[:n]
+    lo = states[1].reshape(-1)[:n]
+    return hi, lo
+
+
+def xsh_rr(state: U64Pair) -> jnp.ndarray:
+    """PCG XSH-RR output permutation (O'Neill 2014), the paper's Sec. 3.4.
+
+    64-bit state -> 32-bit output:
+      xorshifted = uint32(((state >> 18) ^ state) >> 27)
+      rot        = state >> 59
+      out        = ror32(xorshifted, rot)
+    """
+    sh, sl = state
+    x = u64.xor64(u64.shr64(state, 18), state)
+    xorshifted = u64.shr64(x, 27)[1]  # low 32 bits after >>27 of a 64-bit value
+    rot = sh >> U32(27)  # state >> 59 == hi >> 27
+    return u64.ror32(xorshifted, rot)
+
+
+def truncate_hi(state: U64Pair) -> jnp.ndarray:
+    """Plain truncation output (Eq. 4) — the un-permuted baseline."""
+    return state[0]

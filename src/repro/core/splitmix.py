@@ -1,0 +1,118 @@
+"""SplitMix64 in u32-limb form.
+
+Two roles in this codebase:
+
+1. *Stream derivation* — hashing (parent stream id, tag) into fresh leaf
+   offsets ``h`` and decorrelator seeds, giving a splittable key tree on top
+   of ThundeRiNG's flat stream space (the framework-facing API).
+
+2. *Counter-based decorrelator* ("ctr mode") — the beyond-paper TPU variant:
+   the paper's xorshift128 decorrelator is a serial recurrence, which on an
+   FPGA costs nothing (an LFSR advances once per cycle) but on a TPU forces
+   a sequential fori_loop over time steps.  Replacing it with
+   ``splitmix64(h ^ counter)`` keeps both of the paper's theoretical
+   constraints from Sec. 3.2.3 — (i) the generator family is completely
+   different from (and empirically uncorrelated with) the LCG family, and
+   (ii) distinct streams use disjoint input domains so pairwise correlation
+   stays weak — while making every output value independently addressable
+   (pure map, no serial chain).  See DESIGN.md "Hardware adaptation".
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core import u64
+from repro.core.u64 import U32, U64Pair
+
+GAMMA = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+
+
+def mix64(z: U64Pair) -> U64Pair:
+    """The splitmix64 finalizer: z -> mixed 64-bit value."""
+    z = u64.xor64(z, u64.shr64(z, 30))
+    z = u64.mul64(z, u64.const64(MIX1))
+    z = u64.xor64(z, u64.shr64(z, 27))
+    z = u64.mul64(z, u64.const64(MIX2))
+    z = u64.xor64(z, u64.shr64(z, 31))
+    return z
+
+
+def splitmix64(seed: U64Pair, index: U64Pair) -> U64Pair:
+    """mixed = mix64(seed + (index + 1) * GAMMA). Pure counter-addressable."""
+    step = u64.mul64(u64.add64(index, u64.const64(1)), u64.const64(GAMMA))
+    return mix64(u64.add64(seed, step))
+
+
+def mix64_host(z: int) -> int:
+    """Host-side python-int mirror of mix64 (for goldens/tests)."""
+    m = (1 << 64) - 1
+    z &= m
+    z ^= z >> 30
+    z = (z * MIX1) & m
+    z ^= z >> 27
+    z = (z * MIX2) & m
+    z ^= z >> 31
+    return z
+
+
+def splitmix64_host(seed: int, index: int) -> int:
+    m = (1 << 64) - 1
+    return mix64_host((seed + ((index + 1) * GAMMA)) & m)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer (2 multiplies)."""
+    x = x.astype(jnp.uint32) if hasattr(x, "astype") else x
+    x = x ^ (x >> U32(16))
+    x = x * U32(0x85EBCA6B)
+    x = x ^ (x >> U32(13))
+    x = x * U32(0xC2B2AE35)
+    x = x ^ (x >> U32(16))
+    return x
+
+
+def ctr_decorrelator32(h: U64Pair, counter: U64Pair) -> jnp.ndarray:
+    """Cheap 32-bit counter decorrelator (beyond-paper §Perf variant).
+
+    ~18 uint ops/sample vs ~76 for the full splitmix64 path, while keeping
+    the paper's Sec. 3.2.3 constraints: (i) multiplicative-xorshift hash
+    family, algebraically unrelated to the LCG; (ii) streams occupy
+    disjoint input domains via the 64-bit h folded into the seed word.
+    Statistical battery results in EXPERIMENTS.md §Perf/H3.
+    """
+    hh, hl = h
+    ch, cl = counter
+    seed = (hl ^ ((hh << U32(16)) | (hh >> U32(16))))
+    x = seed + cl * U32(0x9E3779B9) + ch * U32(0x85EBCA77)
+    return fmix32(x)
+
+
+def ctr_decorrelator32_host(h: int, counter: int) -> int:
+    m32 = 0xFFFFFFFF
+    hh, hl = (h >> 32) & m32, h & m32
+    ch, cl = (counter >> 32) & m32, counter & m32
+    seed = hl ^ (((hh << 16) | (hh >> 16)) & m32)
+    x = (seed + cl * 0x9E3779B9 + ch * 0x85EBCA77) & m32
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & m32
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & m32
+    x ^= x >> 16
+    return x
+
+
+def ctr_decorrelator(h: U64Pair, counter: U64Pair) -> jnp.ndarray:
+    """Counter-mode decorrelator output (32 bits): high word of
+    splitmix64(h ^ rotl(counter)).  ``h`` is the leaf offset (unique per
+    stream), ``counter`` the element index within the stream."""
+    z = splitmix64(u64.xor64(h, u64.const64(0xD1B54A32D192ED03)), counter)
+    return z[0] ^ z[1]
+
+
+def ctr_decorrelator_host(h: int, counter: int) -> int:
+    z = splitmix64_host(h ^ 0xD1B54A32D192ED03, counter)
+    return ((z >> 32) ^ z) & 0xFFFFFFFF

@@ -1,0 +1,143 @@
+"""Unsigned 64-bit arithmetic emulated with uint32 limb pairs.
+
+TPU vector units have no native 64-bit integer multiply (and Pallas/Mosaic
+does not lower ``uint64``), so every 64-bit quantity in this codebase is a
+pair of ``uint32`` arrays ``(hi, lo)``.  All helpers below are pure jnp and
+lower both in regular jitted JAX and inside Pallas kernel bodies.
+
+32x32->64 products are built from 16-bit half-limbs (four partial products),
+which is the TPU-native decomposition: each partial product of two 16-bit
+values fits a uint32 lane with no overflow.
+
+Convention: a u64 value ``x`` is represented as ``(x_hi, x_lo)`` with
+``x = x_hi * 2**32 + x_lo`` and both limbs ``jnp.uint32``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# NOTE: numpy (not jnp) scalars — they fold to jaxpr *literals*, which is
+# required inside Pallas kernel bodies (captured jax Arrays are rejected).
+U32 = np.uint32
+MASK16 = U32(0xFFFF)
+
+U64Pair = Tuple[jnp.ndarray, jnp.ndarray]
+
+
+def to_u32(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def split64(value: int) -> Tuple[int, int]:
+    """Split a python int (mod 2**64) into (hi, lo) python ints."""
+    value &= (1 << 64) - 1
+    return (value >> 32) & 0xFFFFFFFF, value & 0xFFFFFFFF
+
+
+def const64(value: int) -> U64Pair:
+    """Python int -> (hi, lo) uint32 numpy scalars (trace-time literals)."""
+    hi, lo = split64(value)
+    return U32(hi), U32(lo)
+
+
+def join64(hi, lo) -> int:
+    """(hi, lo) numpy/int -> python int. Host-side only (for tests/goldens)."""
+    return (int(hi) << 32) | int(lo)
+
+
+def mul32_wide(a: jnp.ndarray, b: jnp.ndarray) -> U64Pair:
+    """Full 32x32 -> 64 bit product via 16-bit half-limbs."""
+    a = a.astype(U32)
+    b = b.astype(U32)
+    a_lo = a & MASK16
+    a_hi = a >> 16
+    b_lo = b & MASK16
+    b_hi = b >> 16
+    ll = a_lo * b_lo  # < 2**32, exact
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+    # bits 16..47 accumulate: upper half of ll plus the low halves of the
+    # cross terms; the sum is at most 3*(2**16-1) + (2**16-1) < 2**18 so it
+    # fits uint32 without overflow.
+    mid = (ll >> 16) + (lh & MASK16) + (hl & MASK16)
+    lo = (ll & MASK16) | ((mid & MASK16) << 16)
+    hi = hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def add64(a: U64Pair, b: U64Pair) -> U64Pair:
+    """(a + b) mod 2**64."""
+    ah, al = a
+    bh, bl = b
+    lo = al + bl
+    carry = (lo < al).astype(U32)
+    hi = ah + bh + carry
+    return hi, lo
+
+
+def sub64(a: U64Pair, b: U64Pair) -> U64Pair:
+    """(a - b) mod 2**64."""
+    ah, al = a
+    bh, bl = b
+    lo = al - bl
+    borrow = (al < bl).astype(U32)
+    hi = ah - bh - borrow
+    return hi, lo
+
+
+def mul64(a: U64Pair, b: U64Pair) -> U64Pair:
+    """(a * b) mod 2**64."""
+    ah, al = a
+    bh, bl = b
+    hi, lo = mul32_wide(al, bl)
+    # Cross terms only contribute to the high limb (mod 2**64): wrapping
+    # uint32 multiplies are exactly what we need.
+    hi = hi + al * bh + ah * bl
+    return hi, lo
+
+
+def xor64(a: U64Pair, b: U64Pair) -> U64Pair:
+    return a[0] ^ b[0], a[1] ^ b[1]
+
+
+def shr64(a: U64Pair, n: int) -> U64Pair:
+    """Logical right shift by a static amount 0 <= n < 64."""
+    ah, al = a
+    if n == 0:
+        return ah, al
+    if n < 32:
+        lo = (al >> n) | (ah << (32 - n))
+        hi = ah >> n
+    else:
+        lo = ah >> (n - 32) if n > 32 else ah
+        hi = jnp.zeros_like(ah)
+    return hi, lo
+
+
+def shl64(a: U64Pair, n: int) -> U64Pair:
+    """Logical left shift by a static amount 0 <= n < 64."""
+    ah, al = a
+    if n == 0:
+        return ah, al
+    if n < 32:
+        hi = (ah << n) | (al >> (32 - n))
+        lo = al << n
+    else:
+        hi = al << (n - 32) if n > 32 else al
+        lo = jnp.zeros_like(al)
+    return hi, lo
+
+
+def ror32(x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Rotate right a uint32 by a per-element amount in [0, 31]."""
+    x = x.astype(U32)
+    r = r.astype(U32) & U32(31)
+    return (x >> r) | (x << ((U32(32) - r) & U32(31)))
+
+
+def eq64(a: U64Pair, b: U64Pair) -> jnp.ndarray:
+    return (a[0] == b[0]) & (a[1] == b[1])

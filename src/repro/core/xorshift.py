@@ -1,0 +1,198 @@
+"""xorshift128 decorrelator (Marsaglia 2003) with GF(2) jump-ahead.
+
+ThundeRiNG (Sec. 3.2.3) decorrelates the LCG leaf streams by XORing each
+with a *substream* of a single xorshift128 generator, substreams spaced
+2**64 steps apart so any pair is guaranteed non-overlapping (Sec. 5.1.2).
+
+xorshift128 is F2-linear: the 128-bit state advances by a fixed bit-matrix
+``M`` over GF(2).  Jump-ahead by N steps is multiplication by ``M**N``.  We
+compute ``M**(2**64)`` once at import (host-side python-int bit tricks —
+the paper's "compile time", Sec. 4.2) and derive the i-th substream's start
+state with i matrix-vector products (batched for lane tables).
+
+State layout: (x, y, z, w) four uint32 words; output is the new ``w``.
+Bit k of the flattened 128-bit state = bit (k % 32) of word (k // 32).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.u64 import U32
+
+# Default seed from Marsaglia's paper.
+DEFAULT_SEED = (123456789, 362436069, 521288629, 88675123)
+
+STATE_WORDS = 4
+STATE_BITS = 128
+
+
+def step_words(x: int, y: int, z: int, w: int) -> Tuple[int, int, int, int]:
+    """One xorshift128 step on python ints (host-side golden)."""
+    t = (x ^ (x << 11)) & 0xFFFFFFFF
+    x, y, z = y, z, w
+    w = (w ^ (w >> 19)) ^ (t ^ (t >> 8))
+    return x, y, z, w & 0xFFFFFFFF
+
+
+def step(state: jnp.ndarray) -> jnp.ndarray:
+    """One xorshift128 step; state shape (..., 4) uint32. Output = new w."""
+    x = state[..., 0]
+    y = state[..., 1]
+    z = state[..., 2]
+    w = state[..., 3]
+    t = x ^ (x << U32(11))
+    new_w = (w ^ (w >> U32(19))) ^ (t ^ (t >> U32(8)))
+    return jnp.stack([y, z, w, new_w], axis=-1)
+
+
+def step_xyzw(x, y, z, w):
+    """One step on four separate uint32 arrays (Pallas-friendly, no stack)."""
+    t = x ^ (x << U32(11))
+    new_w = (w ^ (w >> U32(19))) ^ (t ^ (t >> U32(8)))
+    return y, z, w, new_w
+
+
+# ----------------------------------------------------------------------------
+# GF(2) linear-algebra machinery (host side, exact).
+# A 128x128 bit matrix is a list of 128 column ints: column j = M @ e_j,
+# encoded as a 128-bit python int.  M @ v = XOR of columns at v's set bits.
+# ----------------------------------------------------------------------------
+
+def _state_to_int(words: Tuple[int, int, int, int]) -> int:
+    v = 0
+    for k, word in enumerate(words):
+        v |= (word & 0xFFFFFFFF) << (32 * k)
+    return v
+
+
+def _int_to_state(v: int) -> Tuple[int, int, int, int]:
+    return tuple((v >> (32 * k)) & 0xFFFFFFFF for k in range(4))
+
+
+def _matvec(cols: List[int], v: int) -> int:
+    out = 0
+    while v:
+        lsb = v & -v
+        out ^= cols[lsb.bit_length() - 1]
+        v ^= lsb
+    return out
+
+
+def _matmul(a_cols: List[int], b_cols: List[int]) -> List[int]:
+    """(A @ B): column j of result = A @ (column j of B)."""
+    return [_matvec(a_cols, bj) for bj in b_cols]
+
+
+@functools.lru_cache(maxsize=None)
+def step_matrix() -> Tuple[int, ...]:
+    """The xorshift128 transition as 128 column ints."""
+    cols = []
+    for j in range(STATE_BITS):
+        basis = _int_to_state(1 << j)
+        cols.append(_state_to_int(step_words(*basis)))
+    return tuple(cols)
+
+
+@functools.lru_cache(maxsize=None)
+def matrix_pow2(k: int) -> Tuple[int, ...]:
+    """M**(2**k) as column ints, by repeated squaring (cached)."""
+    if k == 0:
+        return step_matrix()
+    prev = list(matrix_pow2(k - 1))
+    return tuple(_matmul(prev, prev))
+
+
+def jump(words: Tuple[int, int, int, int], n: int) -> Tuple[int, int, int, int]:
+    """Advance a state by n steps via binary decomposition of n (host-side)."""
+    v = _state_to_int(words)
+    k = 0
+    n = int(n)
+    while n:
+        if n & 1:
+            v = _matvec(list(matrix_pow2(k)), v)
+        n >>= 1
+        k += 1
+    return _int_to_state(v)
+
+
+def substream_state(words: Tuple[int, int, int, int], i: int,
+                    log2_spacing: int = 64) -> Tuple[int, int, int, int]:
+    """Start state of substream i: base advanced by i * 2**log2_spacing."""
+    return jump(words, i << log2_spacing)
+
+
+@functools.lru_cache(maxsize=None)
+def lane_table(num_lanes: int, seed: Tuple[int, int, int, int] = DEFAULT_SEED,
+               log2_spacing: int = 64) -> np.ndarray:
+    """Start states for lanes 0..num_lanes-1, shape (num_lanes, 4) uint32.
+
+    Lane i = substream i (spaced 2**64 apart).  Computed once host-side
+    with a single matvec per lane (J = M**(2**64) applied iteratively).
+    """
+    J = list(matrix_pow2(log2_spacing))
+    out = np.empty((num_lanes, 4), np.uint32)
+    v = _state_to_int(seed)
+    for i in range(num_lanes):
+        out[i] = np.array(_int_to_state(v), np.uint32)
+        v = _matvec(J, v)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_pow2_matrices(max_log2: int = 64) -> np.ndarray:
+    """M**(2**k) for k in [0, max_log2) packed as uint32.
+
+    Shape (max_log2, 128, 4): [k, row, word].  Row r of matrix k packed as
+    4 uint32 words, so that output bit r = parity(popcount(row & state)).
+    """
+    out = np.empty((max_log2, STATE_BITS, STATE_WORDS), np.uint32)
+    for k in range(max_log2):
+        cols = matrix_pow2(k)
+        # convert columns -> rows: row r bit j = column j bit r
+        rows = [0] * STATE_BITS
+        for j, col in enumerate(cols):
+            c = col
+            while c:
+                lsb = c & -c
+                r = lsb.bit_length() - 1
+                rows[r] |= 1 << j
+                c ^= lsb
+        for r in range(STATE_BITS):
+            for wd in range(STATE_WORDS):
+                out[k, r, wd] = (rows[r] >> (32 * wd)) & 0xFFFFFFFF
+    return out
+
+
+def jump_traced(state: jnp.ndarray, n_hi: jnp.ndarray, n_lo: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Traced jump-ahead by a dynamic 64-bit count (n_hi, n_lo).
+
+    ``state``: (..., 4) uint32.  Cost: 64 conditional 128x128 GF(2) matvecs,
+    each a (128, 4) & (..., 1, 4) popcount-parity — used once per bulk call,
+    never per element.
+    """
+    mats = jnp.asarray(_packed_pow2_matrices(64))  # (64, 128, 4)
+
+    def matvec(mat, s):
+        # mat: (128, 4); s: (..., 4) -> (..., 4)
+        acc = jnp.bitwise_and(mat, s[..., None, :])  # (..., 128, 4)
+        pc = jax.lax.population_count(acc).astype(U32)
+        parity = jnp.sum(pc, axis=-1) & U32(1)  # (..., 128)
+        bitpos = jnp.arange(32, dtype=U32)
+        bits = parity.reshape(parity.shape[:-1] + (4, 32))
+        words = jnp.sum(bits << bitpos, axis=-1, dtype=U32)
+        return words
+
+    def body(k, s):
+        bit = jnp.where(k < 32, (n_lo >> k.astype(U32)) & U32(1),
+                        (n_hi >> (k.astype(U32) - U32(32))) & U32(1))
+        jumped = matvec(mats[k], s)
+        return jnp.where((bit == 1)[..., None] if bit.ndim else bit == 1,
+                         jumped, s)
+
+    return jax.lax.fori_loop(0, 64, body, state)

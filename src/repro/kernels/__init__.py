@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for ThundeRiNG's compute hot-spots.
+
+  thundering_block.py — bulk (T, S) MISRN generation (ctr + faithful modes)
+  fused_dropout.py    — dropout with inline mask generation
+  mc.py               — fused Monte-Carlo pi / option-pricing kernels
+  ops.py              — jit'd public wrappers (interpret=True off-TPU)
+  ref.py              — pure-jnp oracles for all of the above
+"""

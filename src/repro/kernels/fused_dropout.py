@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: dropout with the mask generated inline (never hits HBM).
+
+Plain dropout reads x, reads (or writes) a mask array, writes y: >= 3
+HBM round-trips of x's footprint.  ThundeRiNG's counter-addressable form
+lets the kernel *regenerate* the mask bits for any element from (leaf h,
+element index) alone, so the kernel is a pure read-x/write-y stream with
+the full RNG pipeline (shared-root affine + XSH-RR + ctr decorrelator)
+evaluated in VREGs.  This is the paper's state-sharing idea as a memory-
+bandwidth optimization: one pre-advanced root state per tile (the single
+multiply) plus trace-time in-tile affine tables.
+
+Tile layout: (BM, N) row-blocks over a (M, N) 2-D view of x, so flat
+element indices are contiguous per tile: p = tile_base + k, k row-major.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import lcg, splitmix, u64
+from repro.core.u64 import U32
+
+
+def _kernel(x_ref, rb_hi_ref, rb_lo_ref, cb_hi_ref, cb_lo_ref,
+            h_hi_ref, h_lo_ref, a_hi_ref, a_lo_ref, c_hi_ref, c_lo_ref,
+            o_ref, *, thresh: int, scale: float, n_cols: int):
+    x = x_ref[...]                                   # (BM, N)
+    bm = x.shape[0]
+    # per-tile base root state (already advanced to ctr0 + tile offset)
+    rb = (rb_hi_ref[...], rb_lo_ref[...])            # (1, 1)
+    # in-tile affine expansion: root(k) = A_{k+1} * rb + C_{k+1}
+    A = (a_hi_ref[...], a_lo_ref[...])               # (BM, N)
+    C = (c_hi_ref[...], c_lo_ref[...])
+    roots = u64.add64(u64.mul64(A, rb), C)
+    h = (h_hi_ref[...], h_lo_ref[...])               # (1, 1)
+    leaf = u64.add64(roots, h)
+    perm = lcg.xsh_rr(leaf)
+    # element counter = ctr_base + k (k row-major in-tile)
+    k = (jax.lax.broadcasted_iota(U32, (bm, n_cols), 0) * U32(n_cols)
+         + jax.lax.broadcasted_iota(U32, (bm, n_cols), 1))
+    ctr = u64.add64((cb_hi_ref[...], cb_lo_ref[...]), (jnp.zeros_like(k), k))
+    deco = splitmix.ctr_decorrelator(h, ctr)
+    bits = perm ^ deco
+    keep = bits < U32(thresh)
+    o_ref[...] = jnp.where(keep, x * x.dtype.type(scale), jnp.zeros_like(x))
+
+
+def fused_dropout_2d(x: jnp.ndarray, h, x0, ctr0, rate: float,
+                     *, block_m: int = 8, interpret=False) -> jnp.ndarray:
+    """Dropout on a (M, N) array; h/x0/ctr0 are u64 (hi, lo) scalar pairs.
+
+    Element (m, n) keeps iff ThundeRiNG bits for flat counter
+    ctr0 + m*N + n are below (1-rate)*2^32; kept values scale by 1/(1-rate).
+    Bit-exact with ref.fused_dropout for any tiling.
+    """
+    if rate <= 0.0:
+        return x
+    M, N = x.shape
+    bm = min(block_m, M)
+    while M % bm:
+        bm -= 1  # fall back to a divisor (shapes here are multiples of 8)
+    n_tiles = M // bm
+    tile_elems = bm * N
+
+    # Per-tile pre-advanced base roots: A(ctr0 + i*tile) x0 + C(...)
+    i_idx = jnp.arange(n_tiles, dtype=U32)
+    # offset = i * tile_elems as exact u64 via 32x32->64 product
+    off_hi, off_lo = u64.mul32_wide(i_idx, U32(tile_elems))
+    base = u64.add64((jnp.broadcast_to(ctr0[0], (n_tiles,)),
+                      jnp.broadcast_to(ctr0[1], (n_tiles,))),
+                     (off_hi, off_lo))
+    A, C = lcg.lcg_skip_traced(base)
+    rb = u64.add64(u64.mul64(A, (jnp.broadcast_to(x0[0], (n_tiles,)),
+                                 jnp.broadcast_to(x0[1], (n_tiles,)))), C)
+
+    # In-tile affine tables (trace-time constants, shared by all tiles).
+    A_hi, A_lo, C_hi, C_lo = lcg.block_affine_constants(tile_elems + 1)
+    At = (jnp.asarray(A_hi[1:]).reshape(bm, N), jnp.asarray(A_lo[1:]).reshape(bm, N))
+    Ct = (jnp.asarray(C_hi[1:]).reshape(bm, N), jnp.asarray(C_lo[1:]).reshape(bm, N))
+
+    thresh = int(round((1.0 - rate) * (1 << 32))) & 0xFFFFFFFF
+    scale = 1.0 / (1.0 - rate)
+
+    col = lambda v: v.reshape(n_tiles, 1)
+    one = lambda v: jnp.broadcast_to(v, (1, 1))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, thresh=thresh, scale=scale, n_cols=N),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((bm, N), lambda i: (i, 0)),      # x
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),       # rb hi
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),       # rb lo
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),       # ctr base hi
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),       # ctr base lo
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),       # h hi
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),       # h lo
+            pl.BlockSpec((bm, N), lambda i: (0, 0)),      # A hi
+            pl.BlockSpec((bm, N), lambda i: (0, 0)),      # A lo
+            pl.BlockSpec((bm, N), lambda i: (0, 0)),      # C hi
+            pl.BlockSpec((bm, N), lambda i: (0, 0)),      # C lo
+        ],
+        out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(x, col(rb[0]), col(rb[1]),
+      col(base[0]), col(base[1]),
+      one(h[0]), one(h[1]),
+      At[0], At[1], Ct[0], Ct[1])
+    return out

@@ -1,0 +1,121 @@
+"""Pallas TPU kernels for the paper's two case studies (Sec. 6):
+pi estimation and Black-Scholes Monte-Carlo option pricing.
+
+Generation is FUSED into the integrand: bits are produced in VREGs,
+converted to uniforms, consumed, and only a per-(tile, lane) partial
+reduction leaves the kernel.  Arithmetic intensity goes from ~1 op/byte
+(bulk generation: every output hits HBM) to ~(pipeline ops x draws)/4B —
+the TPU counterpart of the paper's on-chip FIFO into the application
+kernels (their Table 7 apps never spill random numbers to DDR either).
+
+Grid (T_tiles, S_tiles); each instance draws BT samples for BS lanes and
+emits one (1, BS) partial (count or payoff-sum); the host sums partials.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import lcg, splitmix, u64
+from repro.core.u64 import U32
+
+DEFAULT_BLOCK_T = 256
+DEFAULT_BLOCK_S = 512
+
+
+def _bits(root, ctr_rows, h):
+    """(BT, BS) ThundeRiNG ctr-mode bits from (BT,1) roots + (1,BS) h."""
+    leaf = u64.add64(root, h)
+    perm = lcg.xsh_rr(leaf)
+    deco = splitmix.ctr_decorrelator(h, ctr_rows)
+    return perm ^ deco
+
+
+def _uniform(bits):
+    return (bits >> U32(8)).astype(jnp.float32) * np.float32(2.0 ** -24)
+
+
+def _pi_kernel(root_hi_ref, root_lo_ref, ctr_hi_ref, ctr_lo_ref,
+               hx_hi_ref, hx_lo_ref, hy_hi_ref, hy_lo_ref, o_ref):
+    root = (root_hi_ref[...], root_lo_ref[...])
+    ctr = (ctr_hi_ref[...], ctr_lo_ref[...])
+    ux = _uniform(_bits(root, ctr, (hx_hi_ref[...], hx_lo_ref[...])))
+    uy = _uniform(_bits(root, ctr, (hy_hi_ref[...], hy_lo_ref[...])))
+    inside = (ux * ux + uy * uy) < 1.0
+    o_ref[...] = jnp.sum(inside.astype(jnp.int32), axis=0, keepdims=True)
+
+
+def _option_kernel(root_hi_ref, root_lo_ref, ctr_hi_ref, ctr_lo_ref,
+                   hx_hi_ref, hx_lo_ref, hy_hi_ref, hy_lo_ref, o_ref,
+                   *, s0: float, strike: float, r: float, sigma: float,
+                   t: float):
+    root = (root_hi_ref[...], root_lo_ref[...])
+    ctr = (ctr_hi_ref[...], ctr_lo_ref[...])
+    u1 = _uniform(_bits(root, ctr, (hx_hi_ref[...], hx_lo_ref[...])))
+    u2 = _uniform(_bits(root, ctr, (hy_hi_ref[...], hy_lo_ref[...])))
+    tiny = np.float32(1.1754944e-38)
+    rad = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(u1, tiny)))
+    z = rad * jnp.cos(2.0 * np.float32(jnp.pi) * u2)
+    drift = np.float32((r - 0.5 * sigma * sigma) * t)
+    vol = np.float32(sigma) * jnp.sqrt(np.float32(t))
+    st = np.float32(s0) * jnp.exp(drift + vol * z)
+    payoff = jnp.maximum(st - np.float32(strike), 0.0) * \
+        jnp.exp(np.float32(-r * t))
+    o_ref[...] = jnp.sum(payoff, axis=0, keepdims=True)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _launch(kernel, roots, ctr_rows, hx, hy, out_dtype, *, block_t, block_s,
+            interpret):
+    T = roots[0].shape[0]
+    S = hx[0].shape[0]
+    bt = min(block_t, _pad_to(T, 8))
+    bs = min(block_s, _pad_to(S, 128))
+    Tp, Sp = _pad_to(T, bt), _pad_to(S, bs)
+    assert Tp == T, "num draws must be a multiple of the T block"
+
+    def pad_col(v):
+        return jnp.pad(v, (0, Tp - T)).reshape(Tp, 1)
+
+    def pad_row(v):
+        return jnp.pad(v, (0, Sp - S)).reshape(1, Sp)
+
+    grid = (Tp // bt, Sp // bs)
+    col_spec = pl.BlockSpec((bt, 1), lambda i, j: (i, 0))
+    row_spec = pl.BlockSpec((1, bs), lambda i, j: (0, j))
+    partials = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[col_spec, col_spec, col_spec, col_spec,
+                  row_spec, row_spec, row_spec, row_spec],
+        out_specs=pl.BlockSpec((1, bs), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], Sp), out_dtype),
+        interpret=interpret,
+    )(pad_col(roots[0]), pad_col(roots[1]),
+      pad_col(ctr_rows[0]), pad_col(ctr_rows[1]),
+      pad_row(hx[0]), pad_row(hx[1]), pad_row(hy[0]), pad_row(hy[1]))
+    return partials[:, :S]
+
+
+def pi_partials(roots, ctr_rows, hx, hy, *, block_t=DEFAULT_BLOCK_T,
+                block_s=DEFAULT_BLOCK_S, interpret=False) -> jnp.ndarray:
+    """(T_tiles, S) int32 in-circle partial counts."""
+    return _launch(_pi_kernel, roots, ctr_rows, hx, hy, jnp.int32,
+                   block_t=block_t, block_s=block_s, interpret=interpret)
+
+
+def option_partials(roots, ctr_rows, hx, hy, *, s0, strike, r, sigma, t,
+                    block_t=DEFAULT_BLOCK_T, block_s=DEFAULT_BLOCK_S,
+                    interpret=False) -> jnp.ndarray:
+    """(T_tiles, S) f32 partial discounted-payoff sums."""
+    kern = functools.partial(_option_kernel, s0=s0, strike=strike, r=r,
+                             sigma=sigma, t=t)
+    return _launch(kern, roots, ctr_rows, hx, hy, jnp.float32,
+                   block_t=block_t, block_s=block_s, interpret=interpret)

@@ -1,0 +1,182 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run under ``interpret=True`` — the kernel
+body executes in Python/XLA exactly as written, which is how correctness
+is validated offline; on TPU the same code lowers through Mosaic.
+
+Entry points:
+  * ``thundering_bulk``   — (T, S) bulk MISRN block, mode "ctr"/"faithful"
+  * ``fused_dropout``     — dropout with inline mask generation
+  * ``estimate_pi``       — fused Monte-Carlo pi (paper Sec. 6 app 1)
+  * ``price_option``      — fused Black-Scholes MC (paper Sec. 6 app 2)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lcg, splitmix, stream as stream_mod, u64, xorshift
+from repro.core.u64 import U32
+from repro.kernels import fused_dropout as _fd
+from repro.kernels import mc as _mc
+from repro.kernels import thundering_block as _tb
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def h_table(seed: int, num_streams: int, purpose: int = 0
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(S,) even leaf offsets h_s, derived the same way ThunderStream.derive
+    does (splitmix of (family h, index)), so bulk blocks and the stream API
+    live in the same MISRN family."""
+    fam = stream_mod.new_stream(seed, purpose)
+    sid = jnp.arange(num_streams, dtype=U32)
+    mixed = splitmix.splitmix64(
+        (jnp.broadcast_to(fam.h_hi, sid.shape),
+         jnp.broadcast_to(fam.h_lo, sid.shape)),
+        (jnp.zeros_like(sid), sid))
+    return u64.shl64(mixed, 1)
+
+
+def _roots_and_ctr(x0, offset: int, num_steps: int):
+    ctr = u64.const64(offset)
+    roots = lcg.root_states_vector(x0, ctr, num_steps)
+    t_idx = jnp.arange(num_steps, dtype=U32)
+    ctr_rows = u64.add64((jnp.broadcast_to(ctr[0], t_idx.shape),
+                          jnp.broadcast_to(ctr[1], t_idx.shape)),
+                         (jnp.zeros_like(t_idx), t_idx))
+    return roots, ctr_rows
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_streams", "num_steps", "mode", "offset", "seed", "block_t",
+    "block_s", "use_kernel", "deco"))
+def thundering_bulk(*, seed: int, num_streams: int, num_steps: int,
+                    mode: str = "ctr", offset: int = 0,
+                    block_t: int = _tb.DEFAULT_BLOCK_T,
+                    block_s: int = _tb.DEFAULT_BLOCK_S,
+                    use_kernel: bool = True,
+                    deco: str = "splitmix64") -> jnp.ndarray:
+    """(num_steps, num_streams) uint32 MISRN block (time-major)."""
+    fam = stream_mod.new_stream(seed, 0)
+    x0 = (fam.x0_hi, fam.x0_lo)
+    h = h_table(seed, num_streams)
+    roots, ctr_rows = _roots_and_ctr(x0, offset, num_steps)
+    if mode == "ctr":
+        if not use_kernel:
+            from repro.kernels import ref
+            return ref.thundering_block_ctr(x0, h, num_steps,
+                                            u64.const64(offset), deco=deco)
+        return _tb.block_ctr(roots, ctr_rows, h, block_t=block_t,
+                             block_s=block_s, interpret=_use_interpret(),
+                             deco=deco)
+    elif mode == "faithful":
+        bt = min(block_t, -(-num_steps // 8) * 8)
+        n_tiles = -(-num_steps // bt)
+        # per-(tile, stream) xorshift state: substream s jumped by
+        # offset + i*bt (host-side exact GF(2) jumps; trace-time constants)
+        tbl = xorshift.lane_table(num_streams)
+        states = np.empty((n_tiles, 4, num_streams), np.uint32)
+        for s in range(num_streams):
+            st = tuple(int(w) for w in tbl[s])
+            if offset:
+                st = xorshift.jump(st, offset)
+            for i in range(n_tiles):
+                states[i, :, s] = st
+                st = xorshift.jump(st, bt)
+        if not use_kernel:
+            from repro.kernels import ref
+            return ref.thundering_block_faithful(
+                x0, h, num_steps, jnp.asarray(states[0]).T,
+                u64.const64(offset))
+        return _tb.block_faithful(roots, h, jnp.asarray(states),
+                                  block_t=bt, block_s=block_s,
+                                  interpret=_use_interpret())
+    raise ValueError(mode)
+
+
+def fused_dropout(x: jnp.ndarray, stream: stream_mod.ThunderStream,
+                  rate: float, *, block_m: int = 8,
+                  use_kernel: bool = True) -> jnp.ndarray:
+    """Dropout over arbitrary-shape x, mask addressed by (stream, flat idx).
+
+    The same (stream, counter) always produces the same mask regardless of
+    tiling/sharding — deterministic under resharding and elastic restarts.
+    """
+    if rate <= 0.0:
+        return x
+    shape = x.shape
+    n = x.size
+    last = shape[-1] if len(shape) >= 1 else 1
+    x2 = x.reshape(n // last, last)
+    h = (stream.h_hi, stream.h_lo)
+    x0 = (stream.x0_hi, stream.x0_lo)
+    ctr0 = (stream.ctr_hi, stream.ctr_lo)
+    if not use_kernel:
+        from repro.kernels import ref
+        return ref.fused_dropout(x2, h, x0, ctr0, rate).reshape(shape)
+    out = _fd.fused_dropout_2d(x2, h, x0, ctr0, rate, block_m=block_m,
+                               interpret=_use_interpret())
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "seed", "num_lanes", "draws_per_lane", "block_t", "block_s",
+    "use_kernel"))
+def estimate_pi(*, seed: int, num_lanes: int, draws_per_lane: int,
+                block_t: int = _mc.DEFAULT_BLOCK_T,
+                block_s: int = _mc.DEFAULT_BLOCK_S,
+                use_kernel: bool = True) -> jnp.ndarray:
+    """Monte-Carlo pi over num_lanes independent stream pairs (paper Fig. 8)."""
+    fam = stream_mod.new_stream(seed, 0)
+    x0 = (fam.x0_hi, fam.x0_lo)
+    hx = h_table(seed, num_lanes, purpose=1)
+    hy = h_table(seed, num_lanes, purpose=2)
+    roots, ctr_rows = _roots_and_ctr(x0, 0, draws_per_lane)
+    if use_kernel:
+        partials = _mc.pi_partials(roots, ctr_rows, hx, hy, block_t=block_t,
+                                   block_s=block_s,
+                                   interpret=_use_interpret())
+        inside = jnp.sum(partials.astype(jnp.float32))
+    else:
+        from repro.kernels import ref
+        inside = jnp.sum(ref.mc_pi_partial(x0, hx, hy, draws_per_lane,
+                                           u64.const64(0)).astype(jnp.float32))
+    total = num_lanes * draws_per_lane
+    return 4.0 * inside / total
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "seed", "num_lanes", "draws_per_lane", "s0", "strike", "r", "sigma",
+    "t", "block_t", "block_s", "use_kernel"))
+def price_option(*, seed: int, num_lanes: int, draws_per_lane: int,
+                 s0: float = 100.0, strike: float = 100.0, r: float = 0.05,
+                 sigma: float = 0.2, t: float = 1.0,
+                 block_t: int = _mc.DEFAULT_BLOCK_T,
+                 block_s: int = _mc.DEFAULT_BLOCK_S,
+                 use_kernel: bool = True) -> jnp.ndarray:
+    """European call price via GBM Monte-Carlo (paper Fig. 9 / Table 7)."""
+    fam = stream_mod.new_stream(seed, 0)
+    x0 = (fam.x0_hi, fam.x0_lo)
+    hx = h_table(seed, num_lanes, purpose=3)
+    hy = h_table(seed, num_lanes, purpose=4)
+    roots, ctr_rows = _roots_and_ctr(x0, 0, draws_per_lane)
+    if use_kernel:
+        partials = _mc.option_partials(
+            roots, ctr_rows, hx, hy, s0=s0, strike=strike, r=r, sigma=sigma,
+            t=t, block_t=block_t, block_s=block_s,
+            interpret=_use_interpret())
+        payoff_sum = jnp.sum(partials)
+    else:
+        from repro.kernels import ref
+        payoff_sum = jnp.sum(ref.mc_option_partial(
+            x0, hx, hy, draws_per_lane, u64.const64(0), s0, strike, r,
+            sigma, t))
+    total = num_lanes * draws_per_lane
+    return payoff_sum / total

@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the reference semantics the kernels must reproduce bit-exactly
+(integer outputs) or to float tolerance (fused float kernels).  They are
+themselves validated against the numpy golden (`core/golden.py`) in tests,
+so the chain is: numpy golden <-> jnp ref <-> Pallas kernel.
+
+Block layout convention: bulk generation is **time-major** `(T, S)` —
+time steps on sublanes, streams on lanes.  This is the FPGA dataflow
+rotated for a 8x128 VPU: the paper emits one root state per cycle shared
+by S SOUs; we emit one root *row* per time index shared by S lanes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lcg, splitmix, u64, xorshift
+from repro.core.u64 import U32, U64Pair
+
+
+def leaf_outputs(root: U64Pair, h: U64Pair) -> jnp.ndarray:
+    """XSH_RR(root[t] + h[s]) for all (t, s): (T,)-roots x (S,)-offsets -> (T, S)."""
+    rt = (root[0][:, None], root[1][:, None])
+    hs = (h[0][None, :], h[1][None, :])
+    leaf = u64.add64(rt, hs)
+    return lcg.xsh_rr(leaf)
+
+
+def thundering_block_ctr(x0: U64Pair, h: U64Pair, num_steps: int,
+                         ctr: U64Pair, deco: str = "splitmix64"
+                         ) -> jnp.ndarray:
+    """(T, S) uint32 block, ctr-mode decorrelator.
+
+    Element (t, s) = XSH_RR(A_{ctr+t+1} x0 + C_{ctr+t+1} + h_s)
+                     XOR deco(h_s, ctr + t).
+
+    ``deco``: "splitmix64" (default) or "fmix32" (the 3.2x-cheaper
+    beyond-paper variant; EXPERIMENTS.md §Perf/H3)."""
+    roots = lcg.root_states_vector(x0, ctr, num_steps)
+    permuted = leaf_outputs(roots, h)
+    t_idx = jnp.arange(num_steps, dtype=U32)
+    ctr_t = u64.add64((jnp.broadcast_to(ctr[0], t_idx.shape),
+                       jnp.broadcast_to(ctr[1], t_idx.shape)),
+                      (jnp.zeros_like(t_idx), t_idx))
+    S = h[0].shape[0]
+    deco_fn = splitmix.ctr_decorrelator if deco == "splitmix64" \
+        else splitmix.ctr_decorrelator32
+    dec = deco_fn(
+        (jnp.broadcast_to(h[0][None, :], (num_steps, S)),
+         jnp.broadcast_to(h[1][None, :], (num_steps, S))),
+        (jnp.broadcast_to(ctr_t[0][:, None], (num_steps, S)),
+         jnp.broadcast_to(ctr_t[1][:, None], (num_steps, S))))
+    return permuted ^ dec
+
+
+def thundering_block_faithful(x0: U64Pair, h: U64Pair, num_steps: int,
+                              xs_state: jnp.ndarray,
+                              ctr: U64Pair) -> jnp.ndarray:
+    """(T, S) uint32 block, paper-faithful serial xorshift128 decorrelator.
+
+    ``xs_state``: (S, 4) uint32 — per-stream xorshift128 state already
+    advanced to the block start (substream s jumped by ctr).
+    """
+    roots = lcg.root_states_vector(x0, ctr, num_steps)
+    permuted = leaf_outputs(roots, h)  # (T, S)
+
+    def body(state, perm_row):
+        x, y, z, w = (state[..., i] for i in range(4))
+        x, y, z, w = xorshift.step_xyzw(x, y, z, w)
+        return jnp.stack([x, y, z, w], -1), perm_row ^ w
+
+    _, out = jax.lax.scan(body, xs_state, permuted)
+    return out
+
+
+def dropout_mask_bits(h: U64Pair, x0: U64Pair, ctr0: U64Pair,
+                      n: int) -> jnp.ndarray:
+    """The uint32 stream consumed by fused dropout: full ThundeRiNG ctr
+    pipeline for elements ctr0 .. ctr0+n-1 of leaf h (flat)."""
+    roots = lcg.root_states_vector(x0, ctr0, n)
+    leaf = u64.add64(roots, (jnp.broadcast_to(h[0], (n,)),
+                             jnp.broadcast_to(h[1], (n,))))
+    permuted = lcg.xsh_rr(leaf)
+    idx = jnp.arange(n, dtype=U32)
+    ctr = u64.add64((jnp.broadcast_to(ctr0[0], idx.shape),
+                     jnp.broadcast_to(ctr0[1], idx.shape)),
+                    (jnp.zeros_like(idx), idx))
+    deco = splitmix.ctr_decorrelator(
+        (jnp.broadcast_to(h[0], (n,)), jnp.broadcast_to(h[1], (n,))), ctr)
+    return permuted ^ deco
+
+
+def fused_dropout(x: jnp.ndarray, h: U64Pair, x0: U64Pair, ctr0: U64Pair,
+                  rate: float) -> jnp.ndarray:
+    """Reference fused dropout: mask from ThundeRiNG bits, scaled by 1/keep."""
+    bits = dropout_mask_bits(h, x0, ctr0, x.size).reshape(x.shape)
+    thresh = U32(int(round((1.0 - rate) * (1 << 32))) & 0xFFFFFFFF) \
+        if rate > 0 else U32(0xFFFFFFFF)
+    keep = bits < thresh if rate > 0 else jnp.ones_like(bits, bool)
+    scale = jnp.asarray(1.0 / (1.0 - rate), x.dtype)
+    return jnp.where(keep, x * scale, jnp.zeros_like(x))
+
+
+def uniform_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """U[0,1) float32 from the top 24 bits (matches stream.uniform)."""
+    return (bits >> U32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def mc_pi_partial(x0: U64Pair, hx: U64Pair, hy: U64Pair, num_draws: int,
+                  ctr: U64Pair) -> jnp.ndarray:
+    """Reference for the fused pi kernel.  Each of the S lanes owns two
+    ThundeRiNG streams (leaf hx[s] for x coords, hy[s] for y); returns the
+    int32 count of in-circle draws per lane, shape (S,)."""
+    ux = uniform_from_bits(thundering_block_ctr(x0, hx, num_draws, ctr))
+    uy = uniform_from_bits(thundering_block_ctr(x0, hy, num_draws, ctr))
+    return jnp.sum((ux * ux + uy * uy) < 1.0, axis=0, dtype=jnp.int32)
+
+
+def box_muller(u1: jnp.ndarray, u2: jnp.ndarray) -> jnp.ndarray:
+    """Standard normal from two U[0,1) arrays (cos branch)."""
+    tiny = jnp.float32(1.1754944e-38)
+    r = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(u1, tiny)))
+    return r * jnp.cos(2.0 * jnp.float32(jnp.pi) * u2)
+
+
+def mc_option_partial(x0: U64Pair, hx: U64Pair, hy: U64Pair, num_draws: int,
+                      ctr: U64Pair, s0: float, k: float, r: float,
+                      sigma: float, t: float) -> jnp.ndarray:
+    """Reference for the fused Black-Scholes MC kernel: per-stream sum of
+    discounted call payoffs over num_draws GBM terminal prices. (S,) f32."""
+    u1 = uniform_from_bits(thundering_block_ctr(x0, hx, num_draws, ctr))
+    u2 = uniform_from_bits(thundering_block_ctr(x0, hy, num_draws, ctr))
+    z = box_muller(u1, u2)
+    drift = (r - 0.5 * sigma * sigma) * t
+    st = s0 * jnp.exp(drift + sigma * jnp.sqrt(jnp.float32(t)) * z)
+    payoff = jnp.maximum(st - k, 0.0) * jnp.exp(-r * t)
+    return jnp.sum(payoff, axis=0, dtype=jnp.float32)

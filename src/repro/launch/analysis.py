@@ -1,0 +1,59 @@
+"""Roofline analysis helpers: HLO collective parsing, hardware model.
+
+Import-safe (no jax device-state side effects) — ``dryrun.py`` (which
+forces the 512-device host platform) imports THIS module, never the
+other way round.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+# TPU v5e hardware model for the roofline (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every TYPE[dims] group in an HLO result type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind bytes moved (result-shape convention), from optimized
+    post-SPMD HLO.  'start' variants counted; 'done' variants skipped so
+    async pairs are not double counted."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.*?) (\w[\w\-]*)\(", line)
+        if not m:
+            continue
+        result_type, opname = m.groups()
+        base = opname.replace("-start", "")
+        if opname.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            out[base] += _shape_bytes(result_type)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

@@ -1,0 +1,134 @@
+"""Step functions (train / prefill / decode) + their sharding specs.
+
+These are the units the dry-run lowers and the trainer/server jit:
+  * train_step: fwd + bwd + AdamW update (+ per-step ThundeRiNG substream
+    derivation: rng = derive(root, step) — deterministic, mesh-independent)
+  * prefill_step / decode_step: serving path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import stream as tstream
+from repro.models import registry, sharding
+from repro.models.common import ArchConfig, flatten, unflatten
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def make_train_step(model: registry.Model, *, seed: int = 0,
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000,
+                    compress: Optional[str] = None,
+                    microbatches: int = 1,
+                    param_dtype: Optional[str] = None):
+    """fwd + bwd + AdamW.  ``microbatches`` > 1 = gradient accumulation:
+    the global batch is processed in M sequential slices (lax.scan), so
+    live activation memory scales with B/M while the optics (loss, grads,
+    update) are identical to the monolithic step.
+
+    ``param_dtype="bf16"`` (mixed precision): the fwd/bwd runs against a
+    bf16 cast of the fp32 masters, made ONCE per step before the FSDP
+    all-gathers — weight-gather AND gradient-reduce bytes halve; AdamW
+    still updates fp32 masters.  (Beyond-paper distributed-optimization
+    lever; see EXPERIMENTS.md §Perf.)"""
+    cfg = model.cfg
+    lr = cosine_schedule(peak_lr, warmup, total_steps)
+    root = tstream.new_stream(seed, 0xD07)
+
+    def grads_of(params, batch, rng):
+        if param_dtype == "bf16":
+            p16 = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 else p, params)
+
+            def loss16(p):
+                loss, metrics = model.loss(p, batch, rng)
+                return loss, metrics
+
+            (val, metrics), g16 = jax.value_and_grad(
+                loss16, has_aux=True)(p16)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), g16)
+            return (val, metrics), grads
+
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, rng)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch, step):
+        rng = tstream.derive(root, step.astype(jnp.uint32))
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch, rng)
+        else:
+            M = microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mbatch):
+                (l, m), g = grads_of(params, mbatch, rng)
+                return jax.tree.map(jnp.add, acc, g), (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, ms)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr,
+                                         compress=compress)
+        metrics = dict(metrics, loss=loss, step=step + 1)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_fns(model: registry.Model):
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    def decode_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos)
+
+    return prefill_step, decode_step
+
+
+# ---------------------------------------------------------------------------
+# sharding plumbing
+# ---------------------------------------------------------------------------
+
+def param_sharding_tree(model: registry.Model, params, specs, mesh: Mesh,
+                        mode: str = "train"):
+    flat = flatten(params)
+    pspecs = sharding.param_pspecs(specs, flat, mesh, mode)
+    tree = unflatten({k: NamedSharding(mesh, v) for k, v in pspecs.items()})
+    return tree, unflatten(dict(pspecs))
+
+
+def batch_sharding(cfg: ArchConfig, batch_specs: Dict[str, Any], mesh: Mesh):
+    out = {}
+    for name, spec in batch_specs.items():
+        if name == "cache":
+            pspec = sharding.cache_pspecs(cfg, spec, mesh)
+            out[name] = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                                     is_leaf=lambda x: isinstance(x, P))
+        elif name == "pos":
+            out[name] = NamedSharding(mesh, P())
+        else:
+            bspec = sharding.batch_pspec(mesh, spec.shape[0])
+            extra = (None,) * (len(spec.shape) - 1)
+            out[name] = NamedSharding(mesh, P(*(tuple(bspec) + extra)))
+    return out
+
+
+def opt_sharding_like(param_shardings, mesh: Mesh):
+    """AdamWState sharding: step replicated; m/v like params."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(NamedSharding(mesh, P()), param_shardings,
+                      param_shardings)

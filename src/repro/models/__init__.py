@@ -1,0 +1,3 @@
+"""Model stack: composable families (dense/moe/vlm/ssm/hybrid/encdec)
+with scan-over-layers, ThundeRiNG-stream init & dropout, and logical-axis
+sharding specs.  Entry point: ``repro.models.registry.build(cfg)``."""

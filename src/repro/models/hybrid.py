@@ -1,0 +1,219 @@
+"""Zamba2-style hybrid: mamba2 backbone + ONE shared attention+MLP block
+applied every ``attn_every`` mamba layers (weights shared across all
+applications; per-application LoRA adapters of the reference model are
+omitted — see DESIGN.md).  KV cache exists only for the shared-block
+applications: (n_apps, B, T, K, hd)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stream as tstream
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models import sharding as shd
+from repro.models.common import ArchConfig, ParamFactory, unflatten
+
+
+def n_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_hybrid(cfg: ArchConfig, seed: int):
+    pf = ParamFactory(seed)
+    D, V = cfg.d_model, cfg.vocab
+    K = cfg.n_kv_heads
+    R = cfg.n_heads // K
+    hd = cfg.resolved_head_dim
+    F = cfg.d_ff
+    std = 0.02
+    flat = {"embed": pf.normal("embed", (V, D), 0.02, ("vocab", "embed")),
+            "final_norm": pf.zeros("final_norm", (D,), ("embed",))}
+    flat.update(mamba2.mamba_layer_params(pf, cfg, "layers", cfg.n_layers))
+    # shared attention + MLP block (single copy)
+    flat["shared/attn_norm"] = pf.zeros("shared/attn_norm", (D,), ("embed",))
+    flat["shared/wq"] = pf.normal("shared/wq", (D, K, R, hd), std,
+                                  ("embed", "kv_heads", "q_rep", "head"))
+    flat["shared/wk"] = pf.normal("shared/wk", (D, K, hd), std,
+                                  ("embed", "kv_heads", "head"))
+    flat["shared/wv"] = pf.normal("shared/wv", (D, K, hd), std,
+                                  ("embed", "kv_heads", "head"))
+    flat["shared/wo"] = pf.normal("shared/wo", (K, R, hd, D), std,
+                                  ("kv_heads", "q_rep", "head", "embed"))
+    flat["shared/mlp_norm"] = pf.zeros("shared/mlp_norm", (D,), ("embed",))
+    flat["shared/wg"] = pf.normal("shared/wg", (D, F), std, ("embed", "f"))
+    flat["shared/wi"] = pf.normal("shared/wi", (D, F), std, ("embed", "f"))
+    flat["shared/wo_mlp"] = pf.normal("shared/wo_mlp", (F, D), std,
+                                      ("f", "embed"))
+    return unflatten(flat), dict(pf.specs)
+
+
+def _shared_block(cfg, sp, h, positions, kv_cache=None, pos=None):
+    a_in = L.rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+    q, k, v = L.qkv_split(a_in, sp["wq"], sp["wk"], sp["wv"])
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if kv_cache is not None:
+        kc, vc = kv_cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                 pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                 pos, axis=1)
+        o = L.decode_attention(q, kc, vc, pos)
+        new_kv = (kc, vc)
+    else:
+        o = L.attention(q, k, v, causal=True, q_chunk=cfg.q_chunk)
+        new_kv = (k, v)
+    h = h + L.attn_out(o, sp["wo"])
+    m_in = L.rms_norm(h, sp["mlp_norm"], cfg.norm_eps)
+    h = shd.activation_hint(h + L.mlp(m_in, sp["wi"], sp["wo_mlp"], "silu",
+                                      sp["wg"]))
+    return h, new_kv
+
+
+def _mamba_group(cfg, params, h, g0, g1, rng):
+    """Scan mamba layers [g0, g1) (static bounds)."""
+    sub = jax.tree.map(lambda a: jax.lax.slice_in_dim(a, g0, g1, axis=0),
+                       params["layers"])
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li = xs
+        lrng = tstream.derive(rng, li) if rng is not None else None
+        h, _ = mamba2.mamba_block(cfg, lp, h, lrng)
+        return (h,), ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    (h,), _ = jax.lax.scan(body_fn, (h,), (sub, jnp.arange(g0, g1)),
+                           unroll=True if cfg.scan_unroll else 1)
+    return h
+
+
+def hybrid_forward(cfg: ArchConfig, params, tokens, *, rng=None,
+                   return_hidden: bool = False):
+    h = shd.activation_hint(L.embed(tokens, params["embed"]))
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ae = cfg.attn_every
+    napps = n_apps(cfg)
+    lo = 0
+    for g in range(napps):
+        h, _ = _shared_block(cfg, params["shared"], h, positions)
+        h = _mamba_group(cfg, params, h, lo, lo + ae, rng)
+        lo += ae
+    if lo < cfg.n_layers:
+        h = _mamba_group(cfg, params, h, lo, cfg.n_layers, rng)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h, jnp.zeros((), jnp.float32)
+    return L.unembed(h, params["embed"]), jnp.zeros((), jnp.float32)
+
+
+def hybrid_prefill(cfg: ArchConfig, params, tokens):
+    h = shd.activation_hint(L.embed(tokens, params["embed"]))
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ae = cfg.attn_every
+    napps = n_apps(cfg)
+    kvs, sstates, tx, tb, tc = [], [], [], [], []
+    lo = 0
+
+    def group_prefill(h, g0, g1):
+        sub = jax.tree.map(lambda a: jax.lax.slice_in_dim(a, g0, g1, axis=0),
+                           params["layers"])
+
+        def body(carry, xs):
+            (h,) = carry
+            lp, li = xs
+            h, (st, tails) = mamba2.mamba_block(cfg, lp, h)
+            return (h,), (st, tails[0], tails[1], tails[2])
+
+        body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+        (h,), caches = jax.lax.scan(body_fn, (h,), (sub, jnp.arange(g0, g1)),
+                                    unroll=True if cfg.scan_unroll else 1)
+        return h, caches
+
+    for g in range(napps):
+        h, kv = _shared_block(cfg, params["shared"], h, positions)
+        kvs.append(kv)
+        h, caches = group_prefill(h, lo, lo + ae)
+        sstates.append(caches[0])
+        tx.append(caches[1]); tb.append(caches[2]); tc.append(caches[3])
+        lo += ae
+    if lo < cfg.n_layers:
+        h, caches = group_prefill(h, lo, cfg.n_layers)
+        sstates.append(caches[0])
+        tx.append(caches[1]); tb.append(caches[2]); tc.append(caches[3])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(h[:, -1:], params["embed"])[:, 0]
+    cache = (jnp.stack([kv[0] for kv in kvs]),
+             jnp.stack([kv[1] for kv in kvs]),
+             jnp.concatenate(sstates, 0), jnp.concatenate(tx, 0),
+             jnp.concatenate(tb, 0), jnp.concatenate(tc, 0))
+    return logits, cache
+
+
+def hybrid_decode(cfg: ArchConfig, params, cache, token, pos):
+    kc_all, vc_all, sstates, tx, tb, tc = cache
+    h = L.embed(token, params["embed"])
+    B = token.shape[0]
+    positions = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+    ae = cfg.attn_every
+    napps = n_apps(cfg)
+    new_kc, new_vc = [], []
+    new_caches = []
+    lo = 0
+
+    def group_decode(h, g0, g1):
+        sub = jax.tree.map(lambda a: jax.lax.slice_in_dim(a, g0, g1, axis=0),
+                           params["layers"])
+        sl = lambda a: jax.lax.slice_in_dim(a, g0, g1, axis=0)
+
+        def body(carry, xs):
+            (h,) = carry
+            lp, li, st, x_, b_, c_ = xs
+            h, st, (x_, b_, c_) = mamba2.mamba_decode_step(
+                cfg, lp, h, st, (x_, b_, c_))
+            return (h,), (st, x_, b_, c_)
+
+        body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+        (h,), caches = jax.lax.scan(
+            body_fn, (h,),
+            (sub, jnp.arange(g0, g1), sl(sstates), sl(tx), sl(tb), sl(tc)),
+            unroll=True if cfg.scan_unroll else 1)
+        return h, caches
+
+    for g in range(napps):
+        h, kv = _shared_block(cfg, params["shared"], h, positions,
+                              kv_cache=(kc_all[g], vc_all[g]), pos=pos)
+        new_kc.append(kv[0]); new_vc.append(kv[1])
+        h, caches = group_decode(h, lo, lo + ae)
+        new_caches.append(caches)
+        lo += ae
+    if lo < cfg.n_layers:
+        h, caches = group_decode(h, lo, cfg.n_layers)
+        new_caches.append(caches)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(h, params["embed"])[:, 0]
+    cache = (jnp.stack(new_kc), jnp.stack(new_vc),
+             jnp.concatenate([c[0] for c in new_caches], 0),
+             jnp.concatenate([c[1] for c in new_caches], 0),
+             jnp.concatenate([c[2] for c in new_caches], 0),
+             jnp.concatenate([c[3] for c in new_caches], 0))
+    return logits, cache
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, ctx: int):
+    Lc, H, N, P = cfg.n_layers, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    K = cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ck = cfg.ssm_conv
+    na = n_apps(cfg)
+    return (jnp.zeros((na, batch, ctx, K, hd), L.COMPUTE_DTYPE),
+            jnp.zeros((na, batch, ctx, K, hd), L.COMPUTE_DTYPE),
+            jnp.zeros((Lc, batch, H, N, P), jnp.float32),
+            jnp.zeros((Lc, batch, ck - 1, cfg.d_inner), L.COMPUTE_DTYPE),
+            jnp.zeros((Lc, batch, ck - 1, N), L.COMPUTE_DTYPE),
+            jnp.zeros((Lc, batch, ck - 1, N), L.COMPUTE_DTYPE))

@@ -1,0 +1,295 @@
+"""Transformer building blocks (pure functions, pjit/SPMD-friendly).
+
+Conventions:
+  * params are fp32; compute casts to bf16 with fp32 softmax/norm accums.
+  * attention heads carry split (K, R) dims — K = kv heads, R = query
+    repeats (H = K*R) — so EITHER dim can take the "model" mesh axis
+    (GQA with many kv heads shards K; MQA shards R with K replicated).
+  * memory-efficient attention: lax.scan over query chunks with full-key
+    logits per chunk (peak q_chunk x T per head) — no S x S materialization.
+  * dropout is counter-addressable ThundeRiNG bits (the decorrelator member
+    of the family): mask(b,s,d) depends only on (leaf h, flat element
+    index), so it is bitwise identical under any sharding or re-sharding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import splitmix, u64
+from repro.core import stream as tstream
+from repro.core.u64 import U32
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, np.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, K, R, hd) or (..., S, K, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    # insert singleton head dims between S and hd so angles rank-matches x
+    extra = x.ndim - angles.ndim
+    for _ in range(extra):
+        angles = angles[..., None, :]
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(n_pos: int, d_model: int) -> np.ndarray:
+    """Whisper-style sinusoidal embeddings, (n_pos, d_model) f32."""
+    log_timescale = math.log(10000.0) / (d_model // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(d_model // 2, dtype=np.float32))
+    ang = np.arange(n_pos, dtype=np.float32)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# ThundeRiNG dropout (counter-addressable, partition-friendly)
+# ---------------------------------------------------------------------------
+
+def dropout_bits(h: Tuple[jnp.ndarray, jnp.ndarray],
+                 ctr0: Tuple[jnp.ndarray, jnp.ndarray],
+                 shape: Tuple[int, ...]) -> jnp.ndarray:
+    """uint32 bits for elements ctr0 .. ctr0+prod(shape)-1, laid out row-
+    major over ``shape`` — computed elementwise from broadcasted iotas (no
+    flat intermediate), so XLA partitions it like any elementwise op."""
+    sizes = list(shape)
+    flat_hi = jnp.zeros(shape, U32)
+    flat_lo = jnp.zeros(shape, U32)
+    stride = 1
+    for d in reversed(range(len(sizes))):
+        idx = jax.lax.broadcasted_iota(U32, tuple(shape), d)
+        # flat += idx * stride (64-bit accumulate)
+        shi, slo = u64.mul32_wide(idx, U32(stride & 0xFFFFFFFF))
+        shi = shi + idx * U32((stride >> 32) & 0xFFFFFFFF)
+        flat_hi, flat_lo = u64.add64((flat_hi, flat_lo), (shi, slo))
+        stride *= sizes[d]
+    ctr = u64.add64((jnp.broadcast_to(ctr0[0], shape),
+                     jnp.broadcast_to(ctr0[1], shape)),
+                    (flat_hi, flat_lo))
+    hh = (jnp.broadcast_to(h[0], shape), jnp.broadcast_to(h[1], shape))
+    return splitmix.ctr_decorrelator(hh, ctr)
+
+
+def dropout(x: jnp.ndarray, stream: Optional[tstream.ThunderStream],
+            rate: float) -> jnp.ndarray:
+    if rate <= 0.0 or stream is None:
+        return x
+    bits = dropout_bits((stream.h_hi, stream.h_lo),
+                        (stream.ctr_hi, stream.ctr_lo), x.shape)
+    thresh = U32(int(round((1.0 - rate) * (1 << 32))) & 0xFFFFFFFF)
+    keep = bits < thresh
+    scale = x.dtype.type(1.0 / (1.0 - rate))
+    return jnp.where(keep, x * scale, jnp.zeros_like(x))
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _attn_logits(q, k, scale):
+    # q: (B, S, K, R, d); k: (B, T, K, d) -> (B, K, R, S, T) fp32
+    return jnp.einsum("bqkrd,btkd->bkrqt", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _attn_combine(w, v):
+    # w: (B, K, R, S, T) f32; v: (B, T, K, d) -> (B, S, K, R, d)
+    return jnp.einsum("bkrqt,btkd->bqkrd", w.astype(v.dtype), v)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool, q_chunk: int = 512,
+              q_offset: int = 0) -> jnp.ndarray:
+    """Memory-efficient attention.
+
+    q: (B, S, K, R, d); k/v: (B, T, K, d).  Returns (B, S, K, R, d).
+    ``q_offset``: absolute position of q[0] (for causal masking in
+    prefill-with-cache scenarios).
+    """
+    B, S, K, R, d = q.shape
+    T = k.shape[1]
+    scale = np.float32(1.0 / math.sqrt(d))
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc -= 1
+    nq = S // qc
+
+    def chunk(qi, start):
+        logits = _attn_logits(qi, k, scale)  # (B, K, R, qc, T)
+        if causal:
+            qpos = start + jax.lax.broadcasted_iota(jnp.int32, (qc, T), 0) \
+                + q_offset
+            tpos = jax.lax.broadcasted_iota(jnp.int32, (qc, T), 1)
+            mask = (tpos <= qpos)[None, None, None]
+            logits = jnp.where(mask, logits, np.float32(-1e30))
+        w = jax.nn.softmax(logits, axis=-1)
+        return _attn_combine(w, v)
+
+    if nq == 1:
+        return chunk(q, 0)
+
+    qs = q.reshape(B, nq, qc, K, R, d).transpose(1, 0, 2, 3, 4, 5)
+
+    # checkpoint each chunk: without it the scan SAVES every chunk's fp32
+    # logits for the backward pass — O(S^2) residuals per layer.
+    @jax.checkpoint
+    def body(_, inp):
+        i, qi = inp
+        return None, chunk(qi, i * qc)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, R, d)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """One-token attention against a (B, T, K, d) cache, masked to <= pos.
+
+    q: (B, 1, K, R, d).  With the cache's T (or K) dim sharded over the
+    model axis this is the flash-decoding pattern: XLA turns the softmax
+    reductions into per-shard partials + all-reduce.
+    """
+    B, _, K, R, d = q.shape
+    T = k_cache.shape[1]
+    if k_cache.dtype != q.dtype:   # e.g. f8 storage -> bf16 compute
+        k_cache = k_cache.astype(q.dtype)
+        v_cache = v_cache.astype(q.dtype)
+    scale = np.float32(1.0 / math.sqrt(d))
+    logits = _attn_logits(q, k_cache, scale)  # (B, K, R, 1, T)
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    mask = (tpos <= pos.astype(jnp.int32))[None, None, None]
+    logits = jnp.where(mask, logits, np.float32(-1e30))
+    w = jax.nn.softmax(logits, axis=-1)
+    return _attn_combine(w, v_cache)
+
+
+def qkv_split(x: jnp.ndarray, wq, wk, wv, bq=None, bk=None, bv=None):
+    """x: (B, S, D); wq: (D, K, R, d); wk/wv: (D, K, d)."""
+    q = jnp.einsum("bsd,dkrh->bskrh", x, wq.astype(x.dtype))
+    k = jnp.einsum("bsd,dkh->bskh", x, wk.astype(x.dtype))
+    v = jnp.einsum("bsd,dkh->bskh", x, wv.astype(x.dtype))
+    if bq is not None:
+        q = q + bq.astype(x.dtype)
+        k = k + bk.astype(x.dtype)
+        v = v + bv.astype(x.dtype)
+    return q, k, v
+
+
+def attn_out(o: jnp.ndarray, wo) -> jnp.ndarray:
+    """o: (B, S, K, R, d); wo: (K, R, d, D)."""
+    return jnp.einsum("bskrh,krhd->bsd", o, wo.astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu" or kind == "geglu_silu":
+        return jax.nn.silu(x)
+    if kind == "geglu" or kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def mlp(x: jnp.ndarray, wi, wo, act: str, wg=None) -> jnp.ndarray:
+    """Gated (wg != None) or plain MLP.  wi/wg: (D, F); wo: (F, D)."""
+    up = jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
+    if wg is not None:
+        gate = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))
+        up = _act(gate, act) * up
+    else:
+        up = _act(up, act)
+    return jnp.einsum("bsf,fd->bsd", up, wo.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table.astype(COMPUTE_DTYPE), tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, D) x (V, D) -> (B, S, V) fp32 logits."""
+    return jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy; logits fp32 (B, S, V), labels (B, S)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def softmax_xent_chunked(h: jnp.ndarray, table: jnp.ndarray,
+                         labels: jnp.ndarray, n_chunks: int = 16
+                         ) -> jnp.ndarray:
+    """Vocab-memory-bounded cross-entropy: unembed + xent evaluated one
+    sequence chunk at a time under a remat'd scan, so the (B, S, V) logits
+    tensor is never materialized (peak = one (B, S/nc, V) chunk).
+
+    h: (B, S, D) hidden states; table: (V, D); labels: (B, S) int32.
+    """
+    B, S, D = h.shape
+    nc = min(n_chunks, S)
+    while S % nc:
+        nc -= 1
+    sc = S // nc
+    hc = h.reshape(B, nc, sc, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, sc).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        hx, lx = xs
+        logits = unembed(hx, table)                     # (B, sc, V) fp32
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (B * S)

@@ -1,0 +1,243 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-parallel training
+form + O(1)-state decode form.  arXiv:2405.21060.
+
+Chunked SSD: sequence split into chunks of Q; within-chunk the quadratic
+(Q x Q) "attention-like" form runs on the MXU; across chunks a linear
+recurrence over the (H, N, P) states runs in a lax.scan.  Sub-quadratic in
+S (O(S*Q + S*N*P)) — this is why the ssm/hybrid archs run the long_500k
+shape that full-attention archs skip.
+
+Single group (G=1) for B/C as in the assigned configs.  The depthwise
+causal conv runs as three separate convs (x / B / C) so the d_inner part
+shards over the model axis while the small B/C parts stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import sharding as shd
+from repro.models.common import ArchConfig, ParamFactory
+
+CD = L.COMPUTE_DTYPE
+
+
+def mamba_layer_params(pf: ParamFactory, cfg: ArchConfig, prefix: str,
+                       n_layers: int) -> Dict[str, jnp.ndarray]:
+    D = cfg.d_model
+    DI = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    ck = cfg.ssm_conv
+    std = 0.02
+    std_out = std / np.sqrt(2.0 * max(cfg.n_layers, 1))
+    Lx = ("layer",)
+    p = {}
+    p[f"{prefix}/norm"] = pf.zeros(f"{prefix}/norm", (n_layers, D),
+                                   Lx + ("embed",))
+    p[f"{prefix}/wz"] = pf.normal(f"{prefix}/wz", (n_layers, D, DI), std,
+                                  Lx + ("embed", "ssm_inner"))
+    p[f"{prefix}/wx"] = pf.normal(f"{prefix}/wx", (n_layers, D, DI), std,
+                                  Lx + ("embed", "ssm_inner"))
+    p[f"{prefix}/wB"] = pf.normal(f"{prefix}/wB", (n_layers, D, N), std,
+                                  Lx + ("embed", "ssm_state"))
+    p[f"{prefix}/wC"] = pf.normal(f"{prefix}/wC", (n_layers, D, N), std,
+                                  Lx + ("embed", "ssm_state"))
+    p[f"{prefix}/wdt"] = pf.normal(f"{prefix}/wdt", (n_layers, D, H), std,
+                                   Lx + ("embed", "ssm_heads"))
+    # dt bias: softplus^-1 of log-spaced dt in [1e-3, 1e-1]
+    dts = np.exp(np.linspace(np.log(1e-3), np.log(1e-1), H,
+                             dtype=np.float32))
+    dtb = np.log(np.expm1(dts))
+    p[f"{prefix}/dt_bias"] = pf.const(
+        f"{prefix}/dt_bias", jnp.broadcast_to(jnp.asarray(dtb), (n_layers, H)),
+        Lx + ("ssm_heads",))
+    a_init = np.log(np.linspace(1.0, 16.0, H, dtype=np.float32))
+    p[f"{prefix}/a_log"] = pf.const(
+        f"{prefix}/a_log", jnp.broadcast_to(jnp.asarray(a_init), (n_layers, H)),
+        Lx + ("ssm_heads",))
+    p[f"{prefix}/d_skip"] = pf.ones(f"{prefix}/d_skip", (n_layers, H),
+                                    Lx + ("ssm_heads",))
+    p[f"{prefix}/conv_x_w"] = pf.normal(f"{prefix}/conv_x_w",
+                                        (n_layers, ck, DI), 0.1,
+                                        Lx + ("conv_k", "ssm_inner"))
+    p[f"{prefix}/conv_x_b"] = pf.zeros(f"{prefix}/conv_x_b", (n_layers, DI),
+                                       Lx + ("ssm_inner",))
+    p[f"{prefix}/conv_B_w"] = pf.normal(f"{prefix}/conv_B_w",
+                                        (n_layers, ck, N), 0.1,
+                                        Lx + ("conv_k", "ssm_state"))
+    p[f"{prefix}/conv_B_b"] = pf.zeros(f"{prefix}/conv_B_b", (n_layers, N),
+                                       Lx + ("ssm_state",))
+    p[f"{prefix}/conv_C_w"] = pf.normal(f"{prefix}/conv_C_w",
+                                        (n_layers, ck, N), 0.1,
+                                        Lx + ("conv_k", "ssm_state"))
+    p[f"{prefix}/conv_C_b"] = pf.zeros(f"{prefix}/conv_C_b", (n_layers, N),
+                                       Lx + ("ssm_state",))
+    p[f"{prefix}/gnorm"] = pf.zeros(f"{prefix}/gnorm", (n_layers, DI),
+                                    Lx + ("ssm_inner",))
+    p[f"{prefix}/out_proj"] = pf.normal(f"{prefix}/out_proj",
+                                        (n_layers, DI, D), std_out,
+                                        Lx + ("ssm_inner", "embed"))
+    return p
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over seq: x (B, S, C), w (ck, C), b (C,).
+
+    ``tail``: (B, ck-1, C) carry-in from previous segment (decode/prefill
+    continuation); zeros when None.
+    """
+    ck = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(ck):
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _ssd_chunked(x, dt, A, B_, C_, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) fp32; A: (H,) fp32 (negative);
+    B_/C_: (B, S, N).  Returns (y (B, S, H, P), final state (B, H, N, P)).
+    """
+    B, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+    xb = x.reshape(B, nc, Q, H, P)
+    dtb = dt.reshape(B, nc, Q, H)
+    Bb = B_.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cb = C_.reshape(B, nc, Q, N).astype(jnp.float32)
+
+    dA = dtb * A                                    # (B, nc, Q, H) fp32, <=0
+    cum = jnp.cumsum(dA, axis=2)
+    # within-chunk decay L[i, j] = exp(cum_i - cum_j), i >= j
+    cumT = cum.transpose(0, 1, 3, 2)                # (B, nc, H, Q)
+    seg = cumT[..., :, None] - cumT[..., None, :]   # (B, nc, H, Q, Q)
+    tri = np.tril(np.ones((Q, Q), np.bool_))
+    Lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cb, Bb)
+    M = scores[:, :, None] * Lmat                   # (B, nc, H, Q, Q)
+    xdt = (xb.astype(jnp.float32) * dtb[..., None])
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xdt)
+
+    # chunk-boundary states
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)    # (B, nc, Q, H)
+    states = jnp.einsum("bcjn,bcjhp->bchnp", Bb, xdt * decay_end[..., None])
+    chunk_decay = jnp.exp(cum[:, :, -1, :])         # (B, nc, H)
+
+    def scan_body(hprev, inp):
+        cd, st = inp                                # (B, H), (B, H, N, P)
+        hnew = cd[..., None, None] * hprev + st
+        return hnew, hprev
+
+    init = jnp.zeros((B, H, N, P), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+    final, prevs = jax.lax.scan(
+        scan_body, init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prevs = prevs.transpose(1, 0, 2, 3, 4)          # (B, nc, H, N, P)
+
+    decay_start = jnp.exp(cum)                      # (B, nc, Q, H)
+    y_off = jnp.einsum("bcin,bchnp->bcihp", Cb, prevs) * \
+        decay_start.transpose(0, 1, 2, 3)[..., None]
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def mamba_block(cfg: ArchConfig, lp: Dict[str, jnp.ndarray], h: jnp.ndarray,
+                rng=None, conv_tails=None, h0=None):
+    """Full-sequence mamba2 block.  h: (B, S, D).
+
+    Returns (out (B, S, D), (final ssm state, conv tails))."""
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    ck = cfg.ssm_conv
+    x_in = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+    z = jnp.einsum("bsd,di->bsi", x_in, lp["wz"].astype(x_in.dtype))
+    xr = jnp.einsum("bsd,di->bsi", x_in, lp["wx"].astype(x_in.dtype))
+    Br = jnp.einsum("bsd,dn->bsn", x_in, lp["wB"].astype(x_in.dtype))
+    Cr = jnp.einsum("bsd,dn->bsn", x_in, lp["wC"].astype(x_in.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x_in.astype(jnp.float32),
+                        lp["wdt"].astype(jnp.float32)) + \
+        lp["dt_bias"].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw)                     # (B, S, H) fp32
+
+    t_x = t_B = t_C = None
+    if conv_tails is not None:
+        t_x, t_B, t_C = conv_tails
+    xc = _causal_conv(xr, lp["conv_x_w"], lp["conv_x_b"], t_x)
+    Bc = _causal_conv(Br, lp["conv_B_w"], lp["conv_B_b"], t_B)
+    Cc = _causal_conv(Cr, lp["conv_C_w"], lp["conv_C_b"], t_C)
+
+    A = -jnp.exp(lp["a_log"].astype(jnp.float32))    # (H,)
+    xh = xc.reshape(*xc.shape[:2], H, P)
+    y, final = _ssd_chunked(xh, dt, A, Bc, Cc, chunk=128, h0=h0)
+    y = y + xh * lp["d_skip"].astype(xh.dtype)[:, None]
+    y = y.reshape(*y.shape[:2], DI)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, lp["out_proj"].astype(y.dtype))
+    if rng is not None:
+        out = L.dropout(out, rng, cfg.dropout_rate)
+    new_tails = (_tail_of(t_x, xr, ck), _tail_of(t_B, Br, ck),
+                 _tail_of(t_C, Cr, ck))
+    return shd.activation_hint(h + out), (final, new_tails)
+
+
+def _tail_of(prev_tail, seq, ck):
+    """Last ck-1 raw conv inputs (using the carry-in when seq is short)."""
+    need = ck - 1
+    if seq.shape[1] >= need:
+        return seq[:, -need:]
+    if prev_tail is None:
+        pad = jnp.zeros((seq.shape[0], need - seq.shape[1], seq.shape[2]),
+                        seq.dtype)
+        return jnp.concatenate([pad, seq], axis=1)
+    keep = need - seq.shape[1]
+    return jnp.concatenate([prev_tail[:, -keep:].astype(seq.dtype), seq],
+                           axis=1)
+
+
+def mamba_decode_step(cfg: ArchConfig, lp, h: jnp.ndarray, state, tails):
+    """One-token step.  h: (B, 1, D); state (B, H, N, P) fp32;
+    tails: 3x (B, ck-1, C).  Returns (out (B, 1, D), state, tails)."""
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    ck = cfg.ssm_conv
+    t_x, t_B, t_C = tails
+    x_in = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+    z = jnp.einsum("bsd,di->bsi", x_in, lp["wz"].astype(x_in.dtype))
+    xr = jnp.einsum("bsd,di->bsi", x_in, lp["wx"].astype(x_in.dtype))
+    Br = jnp.einsum("bsd,dn->bsn", x_in, lp["wB"].astype(x_in.dtype))
+    Cr = jnp.einsum("bsd,dn->bsn", x_in, lp["wC"].astype(x_in.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x_in.astype(jnp.float32),
+                        lp["wdt"].astype(jnp.float32)) + \
+        lp["dt_bias"].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw)[:, 0]               # (B, H)
+
+    xc = _causal_conv(xr, lp["conv_x_w"], lp["conv_x_b"], t_x)[:, 0]
+    Bc = _causal_conv(Br, lp["conv_B_w"], lp["conv_B_b"], t_B)[:, 0]
+    Cc = _causal_conv(Cr, lp["conv_C_w"], lp["conv_C_b"], t_C)[:, 0]
+    new_tails = (_tail_of(t_x, xr, ck), _tail_of(t_B, Br, ck),
+                 _tail_of(t_C, Cr, ck))
+
+    A = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    xh = xc.reshape(-1, H, P).astype(jnp.float32)    # (B, H, P)
+    dA = jnp.exp(dt * A)                             # (B, H)
+    contrib = jnp.einsum("bn,bh,bhp->bhnp", Bc.astype(jnp.float32), dt, xh)
+    state = dA[..., None, None] * state + contrib
+    y = jnp.einsum("bn,bhnp->bhp", Cc.astype(jnp.float32), state)
+    y = y + xh * lp["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(-1, 1, DI).astype(h.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, lp["out_proj"].astype(y.dtype))
+    return h + out, state, new_tails

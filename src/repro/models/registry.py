@@ -1,0 +1,154 @@
+"""Uniform model API over all families.
+
+``build(cfg)`` returns a ``Model`` with:
+  init(seed)                  -> (params, flat path->logical-axes specs)
+  loss(params, batch, rng)    -> (scalar loss, metrics dict)
+  forward(params, batch, rng) -> (logits, aux)
+  prefill(params, batch)      -> (last logits, cache)
+  decode(params, cache, token, pos) -> (logits, cache)
+  init_cache(batch, ctx)      -> zeroed decode cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stream as tstream
+from repro.models import hybrid as hybrid_mod
+from repro.models import layers as L
+from repro.models import ssm_lm
+from repro.models import transformer as tf
+from repro.models.common import ArchConfig
+
+AUX_WEIGHT = 0.01  # MoE aux-loss weight
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+
+
+def _xent_loss(cfg, forward, table_fn):
+    """Loss via hidden states + vocab-chunked xent (the (B,S,V) logits
+    tensor is never materialized; see layers.softmax_xent_chunked)."""
+    def loss(params, batch, rng: Optional[tstream.ThunderStream] = None):
+        h, aux = forward(params, batch, rng, return_hidden=True)
+        nll = L.softmax_xent_chunked(h, table_fn(params), batch["labels"],
+                                     n_chunks=cfg.loss_chunks)
+        total = nll + AUX_WEIGHT * aux
+        return total, {"nll": nll, "aux": aux}
+    return loss
+
+
+def _lm_table(cfg):
+    def table_fn(params):
+        if cfg.tie_embeddings or "unembed" not in params:
+            return params["embed"]
+        return params["unembed"]
+    return table_fn
+
+
+def _kv_dt(cfg):
+    return jnp.float8_e4m3fn if cfg.kv_dtype == "f8" else L.COMPUTE_DTYPE
+
+
+def build(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def forward(params, batch, rng=None, return_hidden=False):
+            return tf.lm_forward(cfg, params, batch["tokens"],
+                                 patches=batch.get("patches"), rng=rng,
+                                 return_hidden=return_hidden)
+
+        def prefill(params, batch):
+            return tf.lm_prefill(cfg, params, batch["tokens"],
+                                 patches=batch.get("patches"))
+
+        def decode(params, cache, token, pos):
+            return tf.lm_decode(cfg, params, cache, token, pos)
+
+        def init_cache(batch, ctx):
+            K = cfg.n_kv_heads
+            hd = cfg.resolved_head_dim
+            shape = (cfg.n_layers, batch, ctx, K, hd)
+            return (jnp.zeros(shape, _kv_dt(cfg)),
+                    jnp.zeros(shape, _kv_dt(cfg)))
+
+        return Model(cfg, lambda seed: tf.init_lm(cfg, seed), forward,
+                     _xent_loss(cfg, forward, _lm_table(cfg)), prefill, decode,
+                     init_cache)
+
+    if fam == "encdec":
+        def forward(params, batch, rng=None, return_hidden=False):
+            return tf.encdec_forward(cfg, params, batch["frames"],
+                                     batch["tokens"], rng=rng,
+                                     return_hidden=return_hidden)
+
+        def prefill(params, batch):
+            return tf.encdec_prefill(cfg, params, batch["frames"],
+                                     batch["tokens"])
+
+        def decode(params, cache, token, pos):
+            return tf.encdec_decode(cfg, params, cache, token, pos)
+
+        def init_cache(batch, ctx):
+            K = cfg.n_kv_heads
+            hd = cfg.resolved_head_dim
+            self_shape = (cfg.n_layers, batch, ctx, K, hd)
+            cross_shape = (cfg.n_layers, batch, cfg.enc_ctx, K, hd)
+            return (jnp.zeros(self_shape, L.COMPUTE_DTYPE),
+                    jnp.zeros(self_shape, L.COMPUTE_DTYPE),
+                    jnp.zeros(cross_shape, L.COMPUTE_DTYPE),
+                    jnp.zeros(cross_shape, L.COMPUTE_DTYPE))
+
+        return Model(cfg, lambda seed: tf.init_encdec(cfg, seed), forward,
+                     _xent_loss(cfg, forward, lambda p: p["embed"]), prefill,
+                     decode, init_cache)
+
+    if fam == "ssm":
+        def forward(params, batch, rng=None, return_hidden=False):
+            return ssm_lm.ssm_forward(cfg, params, batch["tokens"], rng=rng,
+                                      return_hidden=return_hidden)
+
+        def prefill(params, batch):
+            return ssm_lm.ssm_prefill(cfg, params, batch["tokens"])
+
+        def decode(params, cache, token, pos):
+            return ssm_lm.ssm_decode(cfg, params, cache, token, pos)
+
+        def init_cache(batch, ctx):
+            return ssm_lm.init_ssm_cache(cfg, batch)
+
+        return Model(cfg, lambda seed: ssm_lm.init_ssm_lm(cfg, seed),
+                     forward, _xent_loss(cfg, forward, _lm_table(cfg)), prefill,
+                     decode, init_cache)
+
+    if fam == "hybrid":
+        def forward(params, batch, rng=None, return_hidden=False):
+            return hybrid_mod.hybrid_forward(cfg, params, batch["tokens"],
+                                             rng=rng,
+                                             return_hidden=return_hidden)
+
+        def prefill(params, batch):
+            return hybrid_mod.hybrid_prefill(cfg, params, batch["tokens"])
+
+        def decode(params, cache, token, pos):
+            return hybrid_mod.hybrid_decode(cfg, params, cache, token, pos)
+
+        def init_cache(batch, ctx):
+            return hybrid_mod.init_hybrid_cache(cfg, batch, ctx)
+
+        return Model(cfg, lambda seed: hybrid_mod.init_hybrid(cfg, seed),
+                     forward, _xent_loss(cfg, forward, lambda p: p["embed"]),
+                     prefill, decode, init_cache)
+
+    raise ValueError(f"unknown family {fam}")

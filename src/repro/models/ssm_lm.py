@@ -1,0 +1,95 @@
+"""Mamba2 decoder-only LM (attention-free) — family "ssm"."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stream as tstream
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models import sharding as shd
+from repro.models.common import ArchConfig, ParamFactory, unflatten
+
+
+def init_ssm_lm(cfg: ArchConfig, seed: int):
+    pf = ParamFactory(seed)
+    D, V = cfg.d_model, cfg.vocab
+    flat = {"embed": pf.normal("embed", (V, D), 0.02, ("vocab", "embed")),
+            "final_norm": pf.zeros("final_norm", (D,), ("embed",))}
+    flat.update(mamba2.mamba_layer_params(pf, cfg, "layers", cfg.n_layers))
+    return unflatten(flat), dict(pf.specs)
+
+
+def _scan(cfg, h, params, body):
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, (h,), (params["layers"], idx),
+                        unroll=True if cfg.scan_unroll else 1)
+
+
+def ssm_forward(cfg: ArchConfig, params, tokens, *, rng=None,
+                return_hidden: bool = False):
+    h = shd.activation_hint(L.embed(tokens, params["embed"]))
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li = xs
+        lrng = tstream.derive(rng, li) if rng is not None else None
+        h, _ = mamba2.mamba_block(cfg, lp, h, lrng)
+        return (h,), ()
+
+    (h,), _ = _scan(cfg, h, params, body)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h, jnp.zeros((), jnp.float32)
+    table = params["embed"] if cfg.tie_embeddings else params.get(
+        "unembed", params["embed"])
+    return L.unembed(h, table), jnp.zeros((), jnp.float32)
+
+
+def ssm_prefill(cfg: ArchConfig, params, tokens):
+    """Returns (last logits, cache = (ssm_states, conv tails x3))."""
+    h = shd.activation_hint(L.embed(tokens, params["embed"]))
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li = xs
+        h, (state, tails) = mamba2.mamba_block(cfg, lp, h)
+        return (h,), (state, tails[0], tails[1], tails[2])
+
+    (h,), caches = _scan(cfg, h, params, body)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(h[:, -1:], params["embed"])[:, 0]
+    return logits, caches
+
+
+def ssm_decode(cfg: ArchConfig, params, cache, token, pos):
+    """One token step; ``pos`` unused (state-based), kept for API parity."""
+    states, tx, tb, tc = cache
+    h = L.embed(token, params["embed"])
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li, st, x_, b_, c_ = xs
+        h, st, (x_, b_, c_) = mamba2.mamba_decode_step(
+            cfg, lp, h, st, (x_, b_, c_))
+        return (h,), (st, x_, b_, c_)
+
+    idx = jnp.arange(cfg.n_layers)
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    (h,), new_cache = jax.lax.scan(
+        body_fn, (h,), (params["layers"], idx, states, tx, tb, tc),
+        unroll=True if cfg.scan_unroll else 1)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return L.unembed(h, params["embed"])[:, 0], new_cache
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    """Zeroed decode cache (ssm_states, conv tails)."""
+    Lc, H, N, P = cfg.n_layers, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    ck = cfg.ssm_conv
+    return (jnp.zeros((Lc, batch, H, N, P), jnp.float32),
+            jnp.zeros((Lc, batch, ck - 1, cfg.d_inner), L.COMPUTE_DTYPE),
+            jnp.zeros((Lc, batch, ck - 1, cfg.ssm_state), L.COMPUTE_DTYPE),
+            jnp.zeros((Lc, batch, ck - 1, cfg.ssm_state), L.COMPUTE_DTYPE))

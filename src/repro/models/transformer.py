@@ -1,0 +1,459 @@
+"""Decoder-only LM (dense / MoE / VLM-backbone) and encoder-decoder
+(whisper-family) models as pure functions with scan-over-layers.
+
+Parameter layout: every per-layer tensor is stacked on a leading "layer"
+axis and the layer body runs under ``jax.lax.scan`` (+ optional remat), so
+HLO size and compile time are O(1) in depth — required for the 64..88-layer
+assigned configs to compile on the CPU dry-run.
+
+All randomness (init, dropout) comes from named ThundeRiNG streams.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stream as tstream
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import sharding as shd
+from repro.models.common import ArchConfig, ParamFactory, flatten, unflatten
+
+CD = L.COMPUTE_DTYPE
+
+
+def _kr(cfg: ArchConfig) -> Tuple[int, int]:
+    K = cfg.n_kv_heads
+    R = cfg.n_heads // max(K, 1)
+    return K, R
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_params(pf: ParamFactory, cfg: ArchConfig, prefix: str,
+                  n_layers: int, cross: bool = False,
+                  moe: bool = False) -> Dict[str, Any]:
+    D = cfg.d_model
+    K, R = _kr(cfg)
+    hd = cfg.resolved_head_dim
+    F = cfg.d_ff
+    std = 0.02
+    std_out = std / np.sqrt(2.0 * max(cfg.n_layers, 1))
+    p = {}
+    Lx = ("layer",)
+    p[f"{prefix}/attn_norm"] = pf.zeros(f"{prefix}/attn_norm",
+                                        (n_layers, D), Lx + ("embed",))
+    p[f"{prefix}/wq"] = pf.normal(f"{prefix}/wq", (n_layers, D, K, R, hd),
+                                  std, Lx + ("embed", "kv_heads", "q_rep", "head"))
+    p[f"{prefix}/wk"] = pf.normal(f"{prefix}/wk", (n_layers, D, K, hd), std,
+                                  Lx + ("embed", "kv_heads", "head"))
+    p[f"{prefix}/wv"] = pf.normal(f"{prefix}/wv", (n_layers, D, K, hd), std,
+                                  Lx + ("embed", "kv_heads", "head"))
+    p[f"{prefix}/wo"] = pf.normal(f"{prefix}/wo", (n_layers, K, R, hd, D),
+                                  std_out, Lx + ("kv_heads", "q_rep", "head", "embed"))
+    if cfg.qkv_bias:
+        p[f"{prefix}/bq"] = pf.zeros(f"{prefix}/bq", (n_layers, K, R, hd),
+                                     Lx + ("kv_heads", "q_rep", "head"))
+        p[f"{prefix}/bk"] = pf.zeros(f"{prefix}/bk", (n_layers, K, hd),
+                                     Lx + ("kv_heads", "head"))
+        p[f"{prefix}/bv"] = pf.zeros(f"{prefix}/bv", (n_layers, K, hd),
+                                     Lx + ("kv_heads", "head"))
+    if cross:
+        p[f"{prefix}/xattn_norm"] = pf.zeros(f"{prefix}/xattn_norm",
+                                             (n_layers, D), Lx + ("embed",))
+        p[f"{prefix}/xwq"] = pf.normal(f"{prefix}/xwq", (n_layers, D, K, R, hd),
+                                       std, Lx + ("embed", "kv_heads", "q_rep", "head"))
+        p[f"{prefix}/xwk"] = pf.normal(f"{prefix}/xwk", (n_layers, D, K, hd),
+                                       std, Lx + ("embed", "kv_heads", "head"))
+        p[f"{prefix}/xwv"] = pf.normal(f"{prefix}/xwv", (n_layers, D, K, hd),
+                                       std, Lx + ("embed", "kv_heads", "head"))
+        p[f"{prefix}/xwo"] = pf.normal(f"{prefix}/xwo", (n_layers, K, R, hd, D),
+                                       std_out, Lx + ("kv_heads", "q_rep", "head", "embed"))
+    p[f"{prefix}/mlp_norm"] = pf.zeros(f"{prefix}/mlp_norm", (n_layers, D),
+                                       Lx + ("embed",))
+    if moe:
+        E = cfg.n_experts
+        p[f"{prefix}/router"] = pf.normal(f"{prefix}/router", (n_layers, D, E),
+                                          std, Lx + ("embed", "experts"))
+        p[f"{prefix}/moe_wg"] = pf.normal(f"{prefix}/moe_wg", (n_layers, E, D, F),
+                                          std, Lx + ("experts", "embed", "f"))
+        p[f"{prefix}/moe_wi"] = pf.normal(f"{prefix}/moe_wi", (n_layers, E, D, F),
+                                          std, Lx + ("experts", "embed", "f"))
+        p[f"{prefix}/moe_wo"] = pf.normal(f"{prefix}/moe_wo", (n_layers, E, F, D),
+                                          std_out, Lx + ("experts", "f", "embed"))
+    else:
+        gated = cfg.act in ("silu", "geglu")
+        if gated:
+            p[f"{prefix}/wg"] = pf.normal(f"{prefix}/wg", (n_layers, D, F), std,
+                                          Lx + ("embed", "f"))
+        p[f"{prefix}/wi"] = pf.normal(f"{prefix}/wi", (n_layers, D, F), std,
+                                      Lx + ("embed", "f"))
+        p[f"{prefix}/wo_mlp"] = pf.normal(f"{prefix}/wo_mlp", (n_layers, F, D),
+                                          std_out, Lx + ("f", "embed"))
+    return p
+
+
+def init_lm(cfg: ArchConfig, seed: int):
+    """Decoder-only LM params. Returns (nested params, flat path->axes)."""
+    pf = ParamFactory(seed)
+    D, V = cfg.d_model, cfg.vocab
+    flat = {"embed": pf.normal("embed", (V, D), 0.02, ("vocab", "embed")),
+            "final_norm": pf.zeros("final_norm", (D,), ("embed",))}
+    if not cfg.tie_embeddings:
+        flat["unembed"] = pf.normal("unembed", (V, D), 0.02,
+                                    ("vocab", "embed"))
+    flat.update(_layer_params(pf, cfg, "layers", cfg.n_layers,
+                              moe=cfg.family == "moe"))
+    return unflatten(flat), dict(pf.specs)
+
+
+def init_encdec(cfg: ArchConfig, seed: int):
+    pf = ParamFactory(seed)
+    D, V = cfg.d_model, cfg.vocab
+    flat = {"embed": pf.normal("embed", (V, D), 0.02, ("vocab", "embed")),
+            "enc_final_norm_w": pf.ones("enc_final_norm_w", (D,), ("embed",)),
+            "enc_final_norm_b": pf.zeros("enc_final_norm_b", (D,), ("embed",)),
+            "final_norm_w": pf.ones("final_norm_w", (D,), ("embed",)),
+            "final_norm_b": pf.zeros("final_norm_b", (D,), ("embed",))}
+    flat.update(_layer_params(pf, cfg, "enc_layers", cfg.enc_layers))
+    flat.update(_layer_params(pf, cfg, "dec_layers", cfg.n_layers, cross=True))
+    return unflatten(flat), dict(pf.specs)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, x, w, b=None):
+    if cfg.family == "encdec":
+        return L.layer_norm(x, w, b, cfg.norm_eps)
+    return L.rms_norm(x, w, cfg.norm_eps)
+
+
+def _self_attention(cfg, lp, h, positions, *, causal, kv_cache=None,
+                    pos=None, prefix=""):
+    """Returns (attn_out, (k, v)) — k/v for cache building in prefill."""
+    bq = lp.get(f"{prefix}bq")
+    q, k, v = L.qkv_split(h, lp[f"{prefix}wq"], lp[f"{prefix}wk"],
+                          lp[f"{prefix}wv"], bq,
+                          lp.get(f"{prefix}bk"), lp.get(f"{prefix}bv"))
+    if cfg.rope_theta > 0 and cfg.family != "encdec":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    if kv_cache is not None:
+        k_cache, v_cache = kv_cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), pos, axis=1)
+        o = L.decode_attention(q, k_cache, v_cache, pos)
+        return L.attn_out(o, lp[f"{prefix}wo"]), (k_cache, v_cache)
+    o = L.attention(q, k, v, causal=causal, q_chunk=cfg.q_chunk)
+    return L.attn_out(o, lp[f"{prefix}wo"]), (k, v)
+
+
+def _mlp_block(cfg, lp, h, rng, moe: bool):
+    if moe:
+        return moe_mod.moe_mlp(cfg, h, lp["router"], lp["moe_wg"],
+                               lp["moe_wi"], lp["moe_wo"], rng)
+    gated = cfg.act in ("silu", "geglu")
+    out = L.mlp(h, lp["wi"], lp["wo_mlp"], cfg.act,
+                lp.get("wg") if gated else None)
+    return out, jnp.zeros((), jnp.float32)
+
+
+def _decoder_layer(cfg: ArchConfig, h, lp, positions, rng, *,
+                   kv_cache=None, pos=None, enc_out=None, causal=True):
+    """One decoder layer. Returns (h, new_kv, aux_loss)."""
+    moe = cfg.family == "moe"
+    is_ln = cfg.family == "encdec"
+    nrm = lambda x, base: _norm(cfg, x, lp[base],
+                                lp.get(base + "_b")) if not is_ln else \
+        L.layer_norm(x, 1.0 + lp[base], jnp.zeros_like(lp[base]), cfg.norm_eps)
+    seq_gather = kv_cache is None and shd.prefer_seq_gather(
+        cfg, h.shape[0], h.shape[1])
+    a_in = nrm(h, "attn_norm")
+    if seq_gather and not shd.context_parallel_attention(
+            None, max(cfg.n_kv_heads, 1),
+            cfg.n_heads // max(cfg.n_kv_heads, 1)):
+        a_in = shd.gather_seq_hint(a_in)
+    attn, new_kv = _self_attention(cfg, lp, a_in, positions, causal=causal,
+                                   kv_cache=kv_cache, pos=pos)
+    attn = L.dropout(attn, rng, cfg.dropout_rate)
+    h = h + attn
+    if enc_out is not None:
+        x_in = nrm(h, "xattn_norm")
+        xq = jnp.einsum("bsd,dkrh->bskrh", x_in, lp["xwq"].astype(x_in.dtype))
+        xo = L.attention(xq, enc_out[0], enc_out[1], causal=False,
+                         q_chunk=cfg.q_chunk) if pos is None else \
+            L.decode_attention(xq, enc_out[0], enc_out[1],
+                               jnp.asarray(enc_out[0].shape[1], jnp.int32))
+        h = h + L.attn_out(xo, lp["xwo"])
+    m_in = nrm(h, "mlp_norm")
+    if seq_gather:
+        m_in = shd.gather_seq_hint(m_in)
+    mlp_rng = tstream.derive(rng, 0x4D4C50) if rng is not None else None
+    out, aux = _mlp_block(cfg, lp, m_in, mlp_rng, moe)
+    out = L.dropout(out, rng, cfg.dropout_rate)
+    # sequence-parallel carry: the saved inter-layer activation is
+    # (batch over data) x (seq over model); see sharding.activation_hint
+    return shd.activation_hint(h + out), new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# decoder-only forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _unroll(cfg):
+    return True if cfg.scan_unroll else 1
+
+
+def _scan_layers(cfg, h, stacked, body):
+    idx = jnp.arange(cfg.n_layers)
+    body = _maybe_remat(cfg, body)
+    (h, *rest), outs = jax.lax.scan(body, (h,), (stacked, idx),
+                                    unroll=_unroll(cfg))
+    return h, outs
+
+
+def lm_forward(cfg: ArchConfig, params, tokens, *, patches=None,
+               rng: Optional[tstream.ThunderStream] = None,
+               return_hidden: bool = False):
+    """Full forward. tokens (B, S) int32 -> (logits fp32 (B, S, V), aux);
+    with ``return_hidden`` the final-norm hidden states replace logits
+    (for the chunked-xent loss path that never materializes logits)."""
+    h = L.embed(tokens, params["embed"])
+    if cfg.family == "vlm" and patches is not None:
+        # pad+add (not slice+concat): elementwise, so the SP'd sequence
+        # sharding survives — slicing a model-sharded dim forces XLA into
+        # involuntary replication
+        P = patches.shape[1]
+        pad = jnp.pad(patches.astype(h.dtype),
+                      ((0, 0), (0, h.shape[1] - P), (0, 0)))
+        h = h + pad
+    h = shd.activation_hint(h)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li = xs
+        lrng = tstream.derive(rng, li) if rng is not None else None
+        h, _, aux = _decoder_layer(cfg, h, lp, positions, lrng)
+        return (h,), aux
+
+    h, auxes = _scan_layers(cfg, h, params["layers"], body)
+    h = _norm(cfg, h, params["final_norm"])
+    if return_hidden:
+        return h, jnp.mean(auxes)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(h, table), jnp.mean(auxes)
+
+
+def lm_prefill(cfg: ArchConfig, params, tokens, *, patches=None):
+    """Forward over S tokens building the KV cache.
+
+    Returns (last-position logits (B, V), cache (k, v) each
+    (L, B, S, K, hd))."""
+    h = L.embed(tokens, params["embed"])
+    if cfg.family == "vlm" and patches is not None:
+        # pad+add (not slice+concat): elementwise, so the SP'd sequence
+        # sharding survives — slicing a model-sharded dim forces XLA into
+        # involuntary replication
+        P = patches.shape[1]
+        pad = jnp.pad(patches.astype(h.dtype),
+                      ((0, 0), (0, h.shape[1] - P), (0, 0)))
+        h = h + pad
+    h = shd.activation_hint(h)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li = xs
+        h, kv, _ = _decoder_layer(cfg, h, lp, positions, None)
+        return (h,), kv
+
+    h, caches = _scan_layers(cfg, h, params["layers"], body)
+    h = _norm(cfg, h, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(h[:, -1:], table)[:, 0]
+    return logits, caches
+
+
+def lm_decode(cfg: ArchConfig, params, cache, token, pos):
+    """One decode step. token (B, 1) int32; cache (k, v) stacked (L, ...);
+    pos: scalar int32 (current length).  Returns (logits (B, V), cache).
+
+    The cache rides in the scan CARRY (not xs/ys): carry buffers alias
+    across iterations, so with donated inputs the multi-GiB KV cache is
+    updated IN PLACE — a stacked-ys formulation doubles peak memory
+    (measured: gemma-7b decode_32k 27.6 -> ~15 GiB/chip)."""
+    h = L.embed(token, params["embed"])
+    B = token.shape[0]
+    positions = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+
+    def body(carry, xs):
+        h, kc_all, vc_all = carry
+        lp, li = xs
+        kc = jax.lax.dynamic_index_in_dim(kc_all, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, li, 0, keepdims=False)
+        h, (kc, vc), _ = _decoder_layer(cfg, h, lp, positions, None,
+                                        kv_cache=(kc, vc), pos=pos)
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, li, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, li, 0)
+        return (h, kc_all, vc_all), ()
+
+    idx = jnp.arange(cfg.n_layers)
+    body = _maybe_remat(cfg, body)
+    (h, kc_all, vc_all), _ = jax.lax.scan(
+        body, (h, cache[0], cache[1]), (params["layers"], idx),
+        unroll=_unroll(cfg))
+    h = _norm(cfg, h, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(h, table)[:, 0], (kc_all, vc_all)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper-family)
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: (B, enc_ctx, D) precomputed conv-frontend output (stub)."""
+    B, T, D = frames.shape
+    pos = jnp.asarray(L.sinusoid_positions(T, D))
+    h = (frames + pos[None]).astype(CD)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li = xs
+        h, _, _ = _decoder_layer(cfg, h, lp, positions, None, causal=False)
+        return (h,), ()
+
+    idx = jnp.arange(cfg.enc_layers)
+    bodyr = _maybe_remat(cfg, body)
+    (h,), _ = jax.lax.scan(bodyr, (h,), (params["enc_layers"], idx),
+                           unroll=_unroll(cfg))
+    return L.layer_norm(h, params["enc_final_norm_w"],
+                        params["enc_final_norm_b"], cfg.norm_eps)
+
+
+def _dec_positions(cfg, tokens):
+    B, S = tokens.shape
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
+def _cross_kv(cfg, params, enc_out):
+    """Precompute per-decoder-layer cross K/V: (L, B, T, K, hd) x2."""
+    def body(_, lp):
+        k = jnp.einsum("btd,dkh->btkh", enc_out,
+                       lp["xwk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dkh->btkh", enc_out,
+                       lp["xwv"].astype(enc_out.dtype))
+        return None, (k, v)
+
+    _, kv = jax.lax.scan(body, None, params["dec_layers"])
+    return kv
+
+
+def encdec_forward(cfg: ArchConfig, params, frames, tokens, *,
+                   rng: Optional[tstream.ThunderStream] = None,
+                   return_hidden: bool = False):
+    """Training forward: (B, T, D) frames + (B, S) tokens -> logits."""
+    enc_out = encode(cfg, params, frames)
+    h = L.embed(tokens, params["embed"])
+    B, S = tokens.shape
+    pos_table = jnp.asarray(L.sinusoid_positions(S, cfg.d_model))
+    h = shd.activation_hint(h + pos_table[None].astype(h.dtype))
+    positions = _dec_positions(cfg, tokens)
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li = xs
+        lrng = tstream.derive(rng, li) if rng is not None else None
+        xk = jnp.einsum("btd,dkh->btkh", enc_out, lp["xwk"].astype(enc_out.dtype))
+        xv = jnp.einsum("btd,dkh->btkh", enc_out, lp["xwv"].astype(enc_out.dtype))
+        h, _, _ = _decoder_layer(cfg, h, lp, positions, lrng,
+                                 enc_out=(xk, xv))
+        return (h,), ()
+
+    idx = jnp.arange(cfg.n_layers)
+    bodyr = _maybe_remat(cfg, body)
+    (h,), _ = jax.lax.scan(bodyr, (h,), (params["dec_layers"], idx),
+                           unroll=_unroll(cfg))
+    h = L.layer_norm(h, params["final_norm_w"], params["final_norm_b"],
+                     cfg.norm_eps)
+    if return_hidden:
+        return h, jnp.zeros((), jnp.float32)
+    return L.unembed(h, params["embed"]), jnp.zeros((), jnp.float32)
+
+
+def encdec_prefill(cfg: ArchConfig, params, frames, tokens):
+    """Returns (last logits, (self_k, self_v, cross_k, cross_v))."""
+    enc_out = encode(cfg, params, frames)
+    cross = _cross_kv(cfg, params, enc_out)
+    h = L.embed(tokens, params["embed"])
+    B, S = tokens.shape
+    pos_table = jnp.asarray(L.sinusoid_positions(S, cfg.d_model))
+    h = h + pos_table[None].astype(h.dtype)
+    positions = _dec_positions(cfg, tokens)
+
+    def body(carry, xs):
+        (h,) = carry
+        lp, li, xk, xv = xs
+        h, kv, _ = _decoder_layer(cfg, h, lp, positions, None,
+                                  enc_out=(xk, xv))
+        return (h,), kv
+
+    idx = jnp.arange(cfg.n_layers)
+    bodyr = _maybe_remat(cfg, body)
+    (h,), self_kv = jax.lax.scan(
+        bodyr, (h,), (params["dec_layers"], idx, cross[0], cross[1]),
+        unroll=_unroll(cfg))
+    h = L.layer_norm(h, params["final_norm_w"], params["final_norm_b"],
+                     cfg.norm_eps)
+    logits = L.unembed(h[:, -1:], params["embed"])[:, 0]
+    return logits, (self_kv[0], self_kv[1], cross[0], cross[1])
+
+
+def encdec_decode(cfg: ArchConfig, params, cache, token, pos):
+    self_k, self_v, cross_k, cross_v = cache
+    h = L.embed(token, params["embed"])
+    B = token.shape[0]
+    # sinusoid at position pos
+    pos_row = jnp.asarray(L.sinusoid_positions(self_k.shape[2], cfg.d_model))
+    h = h + jax.lax.dynamic_slice_in_dim(pos_row, pos, 1, 0)[None].astype(h.dtype)
+    positions = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+
+    def body(carry, xs):
+        h, sk_all, sv_all = carry
+        lp, li, xk, xv = xs
+        kc = jax.lax.dynamic_index_in_dim(sk_all, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(sv_all, li, 0, keepdims=False)
+        h, (kc, vc), _ = _decoder_layer(cfg, h, lp, positions, None,
+                                        kv_cache=(kc, vc), pos=pos,
+                                        enc_out=(xk, xv))
+        sk_all = jax.lax.dynamic_update_index_in_dim(sk_all, kc, li, 0)
+        sv_all = jax.lax.dynamic_update_index_in_dim(sv_all, vc, li, 0)
+        return (h, sk_all, sv_all), ()
+
+    idx = jnp.arange(cfg.n_layers)
+    bodyr = _maybe_remat(cfg, body)
+    (h, self_k, self_v), _ = jax.lax.scan(
+        bodyr, (h, self_k, self_v),
+        (params["dec_layers"], idx, cross_k, cross_v), unroll=_unroll(cfg))
+    h = L.layer_norm(h, params["final_norm_w"], params["final_norm_b"],
+                     cfg.norm_eps)
+    logits = L.unembed(h, params["embed"])[:, 0]
+    return logits, (self_k, self_v, cross_k, cross_v)

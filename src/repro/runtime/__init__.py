@@ -1,0 +1,3 @@
+from repro.runtime.fault import FaultTolerantLoop, SimulatedFailure
+
+__all__ = ["FaultTolerantLoop", "SimulatedFailure"]

@@ -1,0 +1,251 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs ref.py oracle
+vs numpy golden, swept over shapes, block sizes and modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import golden, stream as stream_mod, u64, xorshift
+from repro.kernels import ops, ref
+
+
+def _golden_block(seed, num_streams, num_steps, mode, offset=0):
+    """(T, S) golden block matching ops.thundering_bulk's stream family."""
+    fam = stream_mod.new_stream(seed, 0)
+    x0 = u64.join64(np.asarray(fam.x0_hi), np.asarray(fam.x0_lo))
+    hh, hl = ops.h_table(seed, num_streams)
+    h = np.array([u64.join64(a, b) for a, b in
+                  zip(np.asarray(hh), np.asarray(hl))], dtype=object)
+    return golden.thundering_block(x0, h, num_steps, mode=mode,
+                                   offset=offset).T  # (T, S)
+
+
+@pytest.mark.parametrize("T,S", [(8, 128), (32, 128), (64, 256), (96, 384)])
+def test_ctr_kernel_matches_golden(T, S):
+    out = np.asarray(ops.thundering_bulk(seed=11, num_streams=S,
+                                         num_steps=T, mode="ctr"))
+    exp = _golden_block(11, S, T, "ctr")
+    assert np.array_equal(out, exp)
+
+
+@pytest.mark.parametrize("T,S", [(8, 128), (24, 256)])
+def test_faithful_kernel_matches_golden(T, S):
+    out = np.asarray(ops.thundering_bulk(seed=13, num_streams=S,
+                                         num_steps=T, mode="faithful"))
+    exp = _golden_block(13, S, T, "faithful")
+    assert np.array_equal(out, exp)
+
+
+@pytest.mark.parametrize("mode", ["ctr", "faithful"])
+def test_kernel_matches_ref(mode):
+    """Pallas kernel == pure-jnp reference bit-for-bit."""
+    a = np.asarray(ops.thundering_bulk(seed=7, num_streams=128, num_steps=32,
+                                       mode=mode, use_kernel=True))
+    b = np.asarray(ops.thundering_bulk(seed=7, num_streams=128, num_steps=32,
+                                       mode=mode, use_kernel=False))
+    assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("bt,bs", [(8, 128), (16, 128), (32, 256)])
+def test_ctr_kernel_block_shape_invariance(bt, bs):
+    """Output independent of the BlockSpec tiling."""
+    base = np.asarray(ops.thundering_bulk(seed=3, num_streams=256,
+                                          num_steps=64, mode="ctr"))
+    tiled = np.asarray(ops.thundering_bulk(seed=3, num_streams=256,
+                                           num_steps=64, mode="ctr",
+                                           block_t=bt, block_s=bs))
+    assert np.array_equal(base, tiled)
+
+
+def test_faithful_kernel_tile_boundary():
+    """Multi-tile T: xorshift states must chain across row tiles."""
+    out = np.asarray(ops.thundering_bulk(seed=5, num_streams=128,
+                                         num_steps=32, mode="faithful",
+                                         block_t=8))
+    exp = _golden_block(5, 128, 32, "faithful")
+    assert np.array_equal(out, exp)
+
+
+def test_ctr_kernel_offset():
+    full = np.asarray(ops.thundering_bulk(seed=9, num_streams=128,
+                                          num_steps=64, mode="ctr"))
+    tail = np.asarray(ops.thundering_bulk(seed=9, num_streams=128,
+                                          num_steps=32, mode="ctr",
+                                          offset=32))
+    assert np.array_equal(full[32:], tail)
+
+
+def test_faithful_kernel_offset():
+    full = np.asarray(ops.thundering_bulk(seed=9, num_streams=128,
+                                          num_steps=48, mode="faithful"))
+    tail = np.asarray(ops.thundering_bulk(seed=9, num_streams=128,
+                                          num_steps=16, mode="faithful",
+                                          offset=32))
+    assert np.array_equal(full[32:], tail)
+
+
+def test_bulk_matches_stream_api():
+    """Column s of the ctr bulk block == ThunderStream with the same h."""
+    S, T = 128, 32
+    blk = np.asarray(ops.thundering_bulk(seed=21, num_streams=S,
+                                         num_steps=T, mode="ctr"))
+    fam = stream_mod.new_stream(21, 0)
+    hh, hl = ops.h_table(21, S)
+    for s in [0, 7, 127]:
+        st = fam._replace(h_hi=hh[s], h_lo=hl[s])
+        col = np.asarray(stream_mod.random_bits(st, (T,)))
+        assert np.array_equal(blk[:, s], col)
+
+
+# ---------------------------------------------------------------------------
+# fused dropout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (16, 256), (4, 8, 128)])
+@pytest.mark.parametrize("rate", [0.1, 0.5])
+def test_fused_dropout_matches_ref(shape, rate):
+    s = stream_mod.new_stream(31, 0)
+    x = jnp.ones(shape, jnp.float32)
+    a = np.asarray(ops.fused_dropout(x, s, rate, use_kernel=True))
+    b = np.asarray(ops.fused_dropout(x, s, rate, use_kernel=False))
+    assert np.array_equal(a, b)
+
+
+def test_fused_dropout_rate_and_scale():
+    s = stream_mod.new_stream(33, 0)
+    x = jnp.ones((64, 512), jnp.float32)
+    rate = 0.25
+    out = np.asarray(ops.fused_dropout(x, s, rate))
+    kept = out != 0
+    assert abs(kept.mean() - 0.75) < 0.02
+    assert np.allclose(out[kept], 1.0 / 0.75, rtol=1e-6)
+
+
+def test_fused_dropout_tiling_invariance():
+    """Mask depends only on (stream, element index), not on block_m."""
+    s = stream_mod.new_stream(35, 0)
+    x = jnp.ones((32, 128), jnp.float32)
+    a = np.asarray(ops.fused_dropout(x, s, 0.3, block_m=8))
+    b = np.asarray(ops.fused_dropout(x, s, 0.3, block_m=16))
+    assert np.array_equal(a, b)
+
+
+def test_fused_dropout_counter_advance():
+    """Advancing the stream by one row's worth shifts the mask by a row."""
+    s = stream_mod.new_stream(37, 0)
+    x = jnp.ones((16, 128), jnp.float32)
+    a = np.asarray(ops.fused_dropout(x, s, 0.4))
+    b = np.asarray(ops.fused_dropout(x[:8], stream_mod.advance(s, 8 * 128), 0.4))
+    assert np.array_equal(a[8:], b)
+
+
+def test_fused_dropout_zero_rate_identity():
+    s = stream_mod.new_stream(39, 0)
+    x = jnp.arange(8 * 128, dtype=jnp.float32).reshape(8, 128)
+    out = np.asarray(ops.fused_dropout(x, s, 0.0))
+    assert np.array_equal(out, np.asarray(x))
+
+
+def test_fused_dropout_bf16():
+    s = stream_mod.new_stream(41, 0)
+    x = jnp.ones((8, 256), jnp.bfloat16)
+    a = np.asarray(ops.fused_dropout(x, s, 0.5, use_kernel=True).astype(jnp.float32))
+    b = np.asarray(ops.fused_dropout(x, s, 0.5, use_kernel=False).astype(jnp.float32))
+    assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo kernels (paper Sec. 6 case studies)
+# ---------------------------------------------------------------------------
+
+def test_pi_kernel_matches_ref():
+    a = float(ops.estimate_pi(seed=1, num_lanes=128, draws_per_lane=256,
+                              use_kernel=True))
+    b = float(ops.estimate_pi(seed=1, num_lanes=128, draws_per_lane=256,
+                              use_kernel=False))
+    assert a == pytest.approx(b, abs=1e-12)
+
+
+def test_pi_estimate_accuracy():
+    est = float(ops.estimate_pi(seed=2, num_lanes=256, draws_per_lane=1024))
+    assert abs(est - np.pi) < 0.02
+
+
+def test_option_kernel_matches_ref():
+    a = float(ops.price_option(seed=1, num_lanes=128, draws_per_lane=256,
+                               use_kernel=True))
+    b = float(ops.price_option(seed=1, num_lanes=128, draws_per_lane=256,
+                               use_kernel=False))
+    assert a == pytest.approx(b, rel=1e-6)
+
+
+def test_option_price_matches_black_scholes():
+    """MC price ~ closed-form Black-Scholes for the default params."""
+    from math import erf, exp, log, sqrt
+
+    s0, k, r, sigma, t = 100.0, 100.0, 0.05, 0.2, 1.0
+    d1 = (log(s0 / k) + (r + sigma ** 2 / 2) * t) / (sigma * sqrt(t))
+    d2 = d1 - sigma * sqrt(t)
+    N = lambda x: 0.5 * (1 + erf(x / sqrt(2)))
+    bs = s0 * N(d1) - k * exp(-r * t) * N(d2)
+    mc = float(ops.price_option(seed=3, num_lanes=512, draws_per_lane=512))
+    assert abs(mc - bs) / bs < 0.02
+
+
+def test_pi_block_shape_invariance():
+    a = float(ops.estimate_pi(seed=4, num_lanes=256, draws_per_lane=256))
+    b = float(ops.estimate_pi(seed=4, num_lanes=256, draws_per_lane=256,
+                              block_t=128, block_s=128))
+    assert a == pytest.approx(b, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# fmix32 decorrelator variant (beyond-paper §Perf/H3)
+# ---------------------------------------------------------------------------
+
+def test_ctr32_kernel_matches_ref():
+    a = np.asarray(ops.thundering_bulk(seed=7, num_streams=128, num_steps=32,
+                                       mode="ctr", deco="fmix32",
+                                       use_kernel=True))
+    b = np.asarray(ops.thundering_bulk(seed=7, num_streams=128, num_steps=32,
+                                       mode="ctr", deco="fmix32",
+                                       use_kernel=False))
+    assert np.array_equal(a, b)
+
+
+def test_ctr32_differs_from_ctr64():
+    a = np.asarray(ops.thundering_bulk(seed=7, num_streams=128, num_steps=32,
+                                       mode="ctr", deco="fmix32"))
+    b = np.asarray(ops.thundering_bulk(seed=7, num_streams=128, num_steps=32,
+                                       mode="ctr", deco="splitmix64"))
+    assert not np.array_equal(a, b)
+
+
+def test_ctr32_matches_host_mirror():
+    from repro.core import splitmix as sm
+    from repro.core import stream as stream_mod, u64 as u64m
+    blk = np.asarray(ops.thundering_bulk(seed=21, num_streams=4, num_steps=8,
+                                         mode="ctr", deco="fmix32"))
+    blk64 = np.asarray(ops.thundering_bulk(seed=21, num_streams=4, num_steps=8,
+                                           mode="ctr", deco="splitmix64"))
+    hh, hl = ops.h_table(21, 4)
+    for s in range(4):
+        h = u64m.join64(np.asarray(hh[s]), np.asarray(hl[s]))
+        for t in range(8):
+            d32 = sm.ctr_decorrelator32_host(h, t)
+            d64 = sm.ctr_decorrelator_host(h, t)
+            # perm ^ deco relation: blk ^ deco recovers the permuted leaf
+            assert (int(blk[t, s]) ^ d32) == (int(blk64[t, s]) ^ d64)
+
+
+def test_ctr32_quality_battery():
+    from repro.core import statistics
+    blk = np.asarray(ops.thundering_bulk(seed=33, num_streams=128,
+                                         num_steps=4096, mode="ctr",
+                                         deco="fmix32", use_kernel=False))
+    streams = blk.T[:4]
+    rep = statistics.inter_stream_report(streams)
+    assert rep["max_pearson"] < 4.0 / np.sqrt(4096)
+    intra = statistics.intra_stream_report(streams[0])
+    assert abs(intra["monobit"] - 0.5) < 0.01
+    assert abs(intra["hwd"]) < 0.05

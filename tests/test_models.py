@@ -1,0 +1,311 @@
+"""Model-stack tests: per-arch reduced smoke, decode/forward consistency,
+SSD-vs-naive-recurrence oracle, MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import stream as tstream
+from repro.models import layers as L
+from repro.models import mamba2, registry
+
+SMOKE_OVERRIDES = {
+    "gemma_7b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                     head_dim=16, d_ff=128, vocab=256, q_chunk=8),
+    "glm4_9b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    d_ff=128, vocab=256, q_chunk=8),
+    "qwen15_32b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                       d_ff=128, vocab=256, q_chunk=8),
+    "granite_34b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+                        d_ff=128, vocab=256, q_chunk=8),
+    "qwen2_vl_72b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                         d_ff=128, vocab=256, vision_prefix=4, q_chunk=8),
+    "granite_moe_3b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                           d_ff=32, vocab=256, n_experts=4, top_k=2,
+                           q_chunk=8),
+    "olmoe_1b_7b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                        d_ff=32, vocab=256, n_experts=8, top_k=2, q_chunk=8),
+    "mamba2_2p7b": dict(n_layers=2, d_model=64, vocab=256, ssm_state=16,
+                        ssm_head_dim=8),
+    "zamba2_7b": dict(n_layers=5, d_model=64, n_heads=4, n_kv_heads=4,
+                      head_dim=16, d_ff=128, vocab=256, ssm_state=16,
+                      ssm_head_dim=8, attn_every=2, q_chunk=8),
+    "whisper_small": dict(n_layers=2, enc_layers=2, d_model=64, n_heads=4,
+                          n_kv_heads=4, d_ff=128, vocab=256, enc_ctx=24,
+                          q_chunk=8),
+}
+
+
+def smoke_cfg(arch):
+    return get_config(arch).scaled(**SMOKE_OVERRIDES[arch])
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.vision_prefix, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.enc_ctx, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list(SMOKE_OVERRIDES))
+def test_arch_smoke_train_step(arch):
+    """One forward + grad step on the reduced config: shapes + no NaNs."""
+    cfg = smoke_cfg(arch)
+    m = registry.build(cfg)
+    params, specs = m.init(0)
+    batch = make_batch(cfg)
+    rng = tstream.new_stream(7, 0)
+
+    loss, metrics = m.loss(params, batch, rng)
+    assert np.isfinite(float(loss))
+    assert 0 < float(loss) < 3 * np.log(cfg.vocab)
+
+    grads = jax.grad(lambda p: m.loss(p, batch, rng)[0])(params)
+    for path, g in zip(jax.tree_util.tree_leaves_with_path(grads),
+                       jax.tree.leaves(grads)):
+        assert np.isfinite(np.asarray(g, np.float32)).all(), path[0]
+
+    logits, aux = m.forward(params, batch, rng)
+    assert logits.shape == (*batch["tokens"].shape, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", list(SMOKE_OVERRIDES))
+def test_arch_smoke_serve_path(arch):
+    """prefill + a few decode steps: shapes, finiteness."""
+    cfg = smoke_cfg(arch)
+    m = registry.build(cfg)
+    params, _ = m.init(0)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits, cache = m.prefill(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    c = m.init_cache(B, S)
+    tok = jnp.ones((B, 1), jnp.int32)
+    for pos in range(3):
+        logits, c = m.decode(params, c, tok, jnp.int32(pos))
+        assert logits.shape == (B, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ["glm4_9b", "granite_34b", "olmoe_1b_7b",
+                                  "mamba2_2p7b", "zamba2_7b"])
+def test_decode_matches_forward(arch):
+    """Greedy incremental decode logits == full-forward logits (bf16 tol)."""
+    cfg = smoke_cfg(arch)
+    m = registry.build(cfg)
+    params, _ = m.init(3)
+    B, S = 2, 8
+    batch = make_batch(cfg, B, S, seed=5)
+    full_logits, _ = m.forward(params, batch)
+
+    cache = m.init_cache(B, S)
+    outs = []
+    for pos in range(S):
+        tok = batch["tokens"][:, pos:pos + 1]
+        lg, cache = m.decode(params, cache, tok, jnp.int32(pos))
+        outs.append(np.asarray(lg))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, np.asarray(full_logits), atol=0.15,
+                               rtol=0.05)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = smoke_cfg("whisper_small")
+    m = registry.build(cfg)
+    params, _ = m.init(3)
+    B, S = 2, 8
+    batch = make_batch(cfg, B, S, seed=5)
+    full_logits, _ = m.forward(params, batch)
+    _, cache = m.prefill(params, batch)  # warm path exercise
+    cache = m.init_cache(B, S)
+    # encdec decode needs the cross-attn cache from prefill of 1 token
+    logits0, cache_pf = m.prefill(
+        params, {**batch, "tokens": batch["tokens"][:, :1]})
+    # rebuild a full-size self cache, keep cross from prefill
+    sk, sv, ck_, cv_ = cache
+    cache = (sk, sv, cache_pf[2], cache_pf[3])
+    outs = []
+    for pos in range(S):
+        tok = batch["tokens"][:, pos:pos + 1]
+        lg, cache = m.decode(params, cache, tok, jnp.int32(pos))
+        outs.append(np.asarray(lg))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, np.asarray(full_logits), atol=0.15,
+                               rtol=0.05)
+
+
+def test_prefill_matches_forward_last_position():
+    cfg = smoke_cfg("glm4_9b")
+    m = registry.build(cfg)
+    params, _ = m.init(4)
+    batch = make_batch(cfg, 2, 16, seed=9)
+    full, _ = m.forward(params, batch)
+    last, _ = m.prefill(params, batch)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full)[:, -1],
+                               atol=0.1, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# SSD oracle
+# ---------------------------------------------------------------------------
+
+def _naive_ssm(x, dt, A, B_, C_):
+    """Token-by-token recurrence oracle (fp64-ish fp32)."""
+    B, S, H, P = x.shape
+    N = B_.shape[-1]
+    h = np.zeros((B, H, N, P), np.float32)
+    ys = np.zeros((B, S, H, P), np.float32)
+    for t in range(S):
+        dA = np.exp(dt[:, t] * A)                      # (B, H)
+        contrib = np.einsum("bn,bh,bhp->bhnp", B_[:, t], dt[:, t], x[:, t])
+        h = dA[..., None, None] * h + contrib
+        ys[:, t] = np.einsum("bn,bhnp->bhp", C_[:, t], h)
+    return ys, h
+
+
+@pytest.mark.parametrize("S,chunk", [(16, 4), (24, 8), (8, 16)])
+def test_ssd_chunked_matches_naive(S, chunk):
+    rng = np.random.default_rng(11)
+    B, H, P, N = 2, 3, 4, 5
+    x = rng.normal(0, 1, (B, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, (B, S, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, (H,)).astype(np.float32)
+    B_ = rng.normal(0, 1, (B, S, N)).astype(np.float32)
+    C_ = rng.normal(0, 1, (B, S, N)).astype(np.float32)
+    y, final = mamba2._ssd_chunked(jnp.asarray(x), jnp.asarray(dt),
+                                   jnp.asarray(A), jnp.asarray(B_),
+                                   jnp.asarray(C_), chunk=chunk)
+    y_ref, h_ref = _naive_ssm(x, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(final), h_ref, atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_ssd_chunk_invariance():
+    rng = np.random.default_rng(12)
+    B, S, H, P, N = 1, 32, 2, 4, 3
+    x = rng.normal(0, 1, (B, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, (B, S, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, (H,)).astype(np.float32)
+    B_ = rng.normal(0, 1, (B, S, N)).astype(np.float32)
+    C_ = rng.normal(0, 1, (B, S, N)).astype(np.float32)
+    args = (jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+            jnp.asarray(B_), jnp.asarray(C_))
+    y1, f1 = mamba2._ssd_chunked(*args, chunk=4)
+    y2, f2 = mamba2._ssd_chunked(*args, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=1e-4,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention / layers
+# ---------------------------------------------------------------------------
+
+def test_attention_chunk_invariance():
+    rng = np.random.default_rng(13)
+    B, S, K, R, d = 2, 32, 2, 3, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, S, K, R, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, K, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, K, d)), jnp.float32)
+    full = L.attention(q, k, v, causal=True, q_chunk=32)
+    chunked = L.attention(q, k, v, causal=True, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_attention_causality():
+    """Changing future tokens must not affect past outputs."""
+    rng = np.random.default_rng(14)
+    B, S, K, R, d = 1, 16, 1, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, S, K, R, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, K, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, K, d)), jnp.float32)
+    base = np.asarray(L.attention(q, k, v, causal=True, q_chunk=4))
+    k2 = k.at[:, 10:].set(99.0)
+    v2 = v.at[:, 10:].set(-99.0)
+    pert = np.asarray(L.attention(q, k2, v2, causal=True, q_chunk=4))
+    np.testing.assert_allclose(base[:, :10], pert[:, :10], atol=1e-5)
+
+
+def test_decode_attention_matches_full():
+    rng = np.random.default_rng(15)
+    B, T, K, R, d = 2, 12, 2, 2, 8
+    q_all = jnp.asarray(rng.normal(0, 1, (B, T, K, R, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, T, K, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, T, K, d)), jnp.float32)
+    full = np.asarray(L.attention(q_all, k, v, causal=True, q_chunk=T))
+    for pos in [0, 5, 11]:
+        dec = np.asarray(L.decode_attention(
+            q_all[:, pos:pos + 1], k, v, jnp.int32(pos)))
+        np.testing.assert_allclose(dec[:, 0], full[:, pos], atol=1e-5,
+                                   rtol=1e-5)
+
+
+def test_rope_orthogonality():
+    """RoPE preserves norms and relative-position inner products."""
+    rng = np.random.default_rng(16)
+    x = jnp.asarray(rng.normal(0, 1, (1, 8, 1, 16)), jnp.float32)
+    pos = jnp.arange(8)[None]
+    rot = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(rot), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # shift invariance: <rope(a,p), rope(b,q)> depends only on p-q
+    a = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 16)), jnp.float32)
+    def ip(p, q):
+        ra = L.apply_rope(a, jnp.asarray([[p]]), 10000.0)
+        rb = L.apply_rope(b, jnp.asarray([[q]]), 10000.0)
+        return float(jnp.sum(ra * rb))
+    assert abs(ip(3, 5) - ip(10, 12)) < 1e-3
+
+
+def test_layer_dropout_deterministic():
+    s = tstream.new_stream(5, 0)
+    x = jnp.ones((4, 8, 16), jnp.float32)
+    a = np.asarray(L.dropout(x, s, 0.5))
+    b = np.asarray(L.dropout(x, s, 0.5))
+    assert np.array_equal(a, b)
+    frac = (a != 0).mean()
+    assert 0.3 < frac < 0.7
+
+
+def test_moe_capacity_and_combine():
+    from repro.models import moe as moe_mod
+    cfg = smoke_cfg("olmoe_1b_7b")
+    m = registry.build(cfg)
+    params, _ = m.init(0)
+    batch = make_batch(cfg, 2, 16)
+    # aux loss should be near 1 (balanced) at random init, definitely finite
+    loss, mets = m.loss(params, batch)
+    assert np.isfinite(float(mets["aux"]))
+    assert float(mets["aux"]) > 0.5
+
+
+def test_init_deterministic_across_calls():
+    cfg = smoke_cfg("glm4_9b")
+    m = registry.build(cfg)
+    p1, _ = m.init(0)
+    p2, _ = m.init(0)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    p3, _ = m.init(1)
+    diff = any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p3)))
+    assert diff

@@ -1,0 +1,167 @@
+"""ThunderStream API: golden equivalence, counter addressing, samplers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import golden, splitmix, stream, u64
+
+
+def _h_int(s):
+    return u64.join64(np.asarray(s.h_hi), np.asarray(s.h_lo))
+
+
+def _x0_int(s):
+    return u64.join64(np.asarray(s.x0_hi), np.asarray(s.x0_lo))
+
+
+def test_random_bits_matches_golden_ctr():
+    s = stream.new_stream(2024, 3)
+    got = np.asarray(stream.random_bits(s, (300,)))
+    exp = golden.thundering_block(_x0_int(s), np.array([_h_int(s)], dtype=object),
+                                  300, mode="ctr")[0]
+    assert np.array_equal(got, exp)
+
+
+def test_random_bits_offset_matches_golden():
+    s = stream.advance(stream.new_stream(7, 0), 1000)
+    got = np.asarray(stream.random_bits(s, (64,)))
+    exp = golden.thundering_block(_x0_int(s), np.array([_h_int(s)], dtype=object),
+                                  64, mode="ctr", offset=1000)[0]
+    assert np.array_equal(got, exp)
+
+
+_FULL = None
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=768),
+       st.sampled_from([1, 17, 256]))  # few shapes -> few recompiles
+def test_counter_addressing_property(offset, n):
+    """bits(advance(s, k))[i] == bits(s)[k + i]  — the pure-map property."""
+    global _FULL
+    s = stream.new_stream(99, 1)
+    if _FULL is None:
+        _FULL = np.asarray(stream.random_bits(s, (1024,)))
+    part = np.asarray(stream.random_bits(stream.advance(s, offset), (n,)))
+    assert np.array_equal(_FULL[offset:offset + n], part)
+
+
+def test_block_boundary_continuity():
+    """Cross the 256-element internal block boundary."""
+    s = stream.new_stream(5, 5)
+    a = np.asarray(stream.random_bits(s, (1024,)))
+    b = np.concatenate([np.asarray(stream.random_bits(stream.advance(s, i), (128,)))
+                        for i in range(0, 1024, 128)])
+    assert np.array_equal(a, b)
+
+
+def test_derive_changes_h_keeps_root():
+    s = stream.new_stream(11, 0)
+    c = stream.derive(s, 42)
+    assert _x0_int(c) == _x0_int(s)
+    assert _h_int(c) != _h_int(s)
+    assert _h_int(c) % 2 == 0, "leaf offsets must stay even (Hull-Dobell)"
+
+
+def test_derive_distinct_tags_distinct_streams():
+    s = stream.new_stream(11, 0)
+    hs = {_h_int(stream.derive(s, t)) for t in range(64)}
+    assert len(hs) == 64
+
+
+def test_split_disjoint_outputs():
+    s = stream.new_stream(13, 0)
+    children = stream.split(s, 8)
+    outs = [np.asarray(stream.random_bits(c, (256,))) for c in children]
+    for i in range(8):
+        for j in range(i + 1, 8):
+            assert not np.array_equal(outs[i], outs[j])
+
+
+def test_derive_traced_tag_matches_static():
+    s = stream.new_stream(17, 0)
+    c_static = stream.derive(s, 5)
+    c_traced = jax.jit(lambda t: stream.derive(s, t))(jnp.uint32(5))
+    assert _h_int(c_traced) == _h_int(c_static)
+
+
+def test_stream_is_pytree():
+    s = stream.new_stream(1, 0)
+    leaves = jax.tree.leaves(s)
+    assert len(leaves) == 6
+    mapped = jax.tree.map(lambda x: x, s)
+    assert isinstance(mapped, stream.ThunderStream)
+
+
+def test_random_bits_jit_and_shapes():
+    s = stream.new_stream(3, 0)
+    out = jax.jit(lambda s: stream.random_bits(s, (4, 8, 2)))(s)
+    assert out.shape == (4, 8, 2) and out.dtype == jnp.uint32
+    flat = stream.random_bits(s, (64,))
+    assert np.array_equal(np.asarray(out).reshape(-1), np.asarray(flat))
+
+
+def test_uniform_range_and_determinism():
+    s = stream.new_stream(21, 0)
+    u = np.asarray(stream.uniform(s, (10_000,)))
+    assert (u >= 0).all() and (u < 1).all()
+    assert abs(u.mean() - 0.5) < 0.02
+    assert np.array_equal(u, np.asarray(stream.uniform(s, (10_000,))))
+
+
+def test_uniform_bounds_scaling():
+    s = stream.new_stream(22, 0)
+    u = np.asarray(stream.uniform(s, (4096,), minval=-2.0, maxval=3.0))
+    assert (u >= -2).all() and (u < 3).all()
+    assert abs(u.mean() - 0.5) < 0.2
+
+
+def test_normal_moments():
+    s = stream.new_stream(23, 0)
+    x = np.asarray(stream.normal(s, (50_000,)))
+    assert abs(x.mean()) < 0.02
+    assert abs(x.std() - 1.0) < 0.02
+    assert np.isfinite(x).all()
+
+
+def test_bernoulli_rate():
+    s = stream.new_stream(24, 0)
+    for p in [0.1, 0.5, 0.9]:
+        m = np.asarray(stream.bernoulli(stream.derive(s, int(p * 10)), p, (20_000,)))
+        assert abs(m.mean() - p) < 0.02
+
+
+def test_categorical_distribution():
+    s = stream.new_stream(25, 0)
+    logits = jnp.log(jnp.asarray([[0.1, 0.2, 0.7]] * 8192))
+    draws = np.asarray(stream.categorical(s, logits))
+    freq = np.bincount(draws, minlength=3) / draws.size
+    assert np.allclose(freq, [0.1, 0.2, 0.7], atol=0.03)
+
+
+def test_gumbel_finite():
+    s = stream.new_stream(26, 0)
+    g = np.asarray(stream.gumbel(s, (10_000,)))
+    assert np.isfinite(g).all()
+    assert abs(g.mean() - 0.5772) < 0.05  # Euler-Mascheroni
+
+
+def test_independent_streams_uncorrelated():
+    s = stream.new_stream(31, 0)
+    a, b = stream.split(s, 2)
+    xa = np.asarray(stream.uniform(a, (100_000,)))
+    xb = np.asarray(stream.uniform(b, (100_000,)))
+    rho = np.corrcoef(xa, xb)[0, 1]
+    assert abs(rho) < 0.01
+
+
+def test_vmap_over_streams():
+    s = stream.new_stream(41, 0)
+    children = stream.split(s, 4)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *children)
+    outs = jax.vmap(lambda st: stream.random_bits(st, (32,)))(stacked)
+    for i, c in enumerate(children):
+        assert np.array_equal(np.asarray(outs[i]), np.asarray(stream.random_bits(c, (32,))))

@@ -1,0 +1,170 @@
+"""Substrate tests: data pipeline determinism, checkpoint atomicity +
+elastic restore, fault-tolerant restart equivalence, optimizer, schedule."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import SyntheticLMPipeline
+from repro.launch.train import smoke_config, train
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import global_norm
+
+
+def test_pipeline_deterministic_and_seekable():
+    p1 = SyntheticLMPipeline(7, 512, 4, 32)
+    p2 = SyntheticLMPipeline(7, 512, 4, 32)
+    b5a = p1.batch_at(5)
+    b5b = p2.batch_at(5)   # fresh pipeline, direct seek
+    assert np.array_equal(np.asarray(b5a["tokens"]), np.asarray(b5b["tokens"]))
+    b6 = p1.batch_at(6)
+    assert not np.array_equal(np.asarray(b5a["tokens"]), np.asarray(b6["tokens"]))
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    p = SyntheticLMPipeline(3, 128, 2, 16)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    assert b["labels"].shape == (2, 16)
+    # tokens/labels are windows of the same stream shifted by 1
+    full = p.batch_at(0)
+    assert np.array_equal(np.asarray(full["tokens"][:, 1:]),
+                          np.asarray(full["labels"][:, :-1]))
+
+
+def test_pipeline_tokens_in_range_and_zipf():
+    p = SyntheticLMPipeline(9, 1000, 8, 128)
+    t = np.asarray(p.batch_at(0)["tokens"])
+    assert t.min() >= 0 and t.max() < 1000
+    # Zipf: low ids much more frequent
+    low = (t < 10).mean()
+    high = (t > 900).mean()
+    assert low > high
+
+
+def test_pipeline_extras():
+    p = SyntheticLMPipeline(1, 64, 2, 8, extras={"patches": (4, 16)})
+    b = p.batch_at(0)
+    assert b["patches"].shape == (2, 4, 16)
+    assert b["patches"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 3, tree)
+    loaded, step, extra = load_checkpoint(str(tmp_path))
+    assert step == 3
+    assert np.array_equal(np.asarray(loaded["a"]), np.arange(6).reshape(2, 3))
+    assert loaded["b"]["c"].dtype == np.dtype("bfloat16") or \
+        str(loaded["b"]["c"].dtype) == "bfloat16"
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.asarray([s])})
+    assert mgr.latest() == 4
+    dirs = sorted(os.listdir(tmp_path))
+    assert dirs == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(7, {"x": jnp.arange(10)})
+    mgr.wait()
+    tree, step, _ = mgr.restore()
+    assert step == 7
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(3)})
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    lr = cosine_schedule(0.1, 5, 200)
+    for _ in range(150):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt = adamw_update(grads, opt, params, lr=lr,
+                                   weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adamw_clipping():
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    grads = {"w": jnp.asarray([1e6, 1e6, 1e6])}
+    p2, opt = adamw_update(grads, opt, params, lr=0.001, clip_norm=1.0,
+                           weight_decay=0.0)
+    # first step with clip: |update| <= lr (adam normalizes) — just finite
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+def test_bf16_gradient_compression_changes_little():
+    params = {"w": jnp.ones(64)}
+    opt = adamw_init(params)
+    g = {"w": jnp.linspace(0.1, 1.0, 64)}
+    p1, _ = adamw_update(g, opt, params, lr=0.01, compress=None,
+                         weight_decay=0.0)
+    p2, _ = adamw_update(g, adamw_init(params), params, lr=0.01,
+                         compress="bf16", weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                               atol=1e-3)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, 10, 100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: crash/restart is bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_train_restart_bitexact(tmp_path):
+    """Inject a failure mid-run; restarted run must produce identical
+    params as an uninterrupted run (counter-addressable RNG + seekable
+    data + atomic checkpoints)."""
+    cfg = smoke_config(get_config("glm4_9b")).scaled(
+        n_layers=1, d_model=32, d_ff=64, vocab=64, n_heads=2, n_kv_heads=2,
+        head_dim=16, loss_chunks=2)
+    kw = dict(steps=8, global_batch=2, seq_len=16, save_every=2, seed=1)
+
+    p_fail, _, _ = train(cfg, ckpt_dir=str(tmp_path / "a"), fail_at=5, **kw)
+    p_clean, _, _ = train(cfg, ckpt_dir=str(tmp_path / "b"), **kw)
+    for a, b in zip(jax.tree.leaves(p_fail), jax.tree.leaves(p_clean)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_elastic_restore_resharding(tmp_path):
+    """Checkpoint written under one 'mesh', restored as plain host arrays
+    (any target sharding): values identical."""
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    loaded, _, _ = load_checkpoint(str(tmp_path))
+    assert np.array_equal(np.asarray(loaded["w"]),
+                          np.arange(64, dtype=np.float32).reshape(8, 8))

@@ -1,0 +1,89 @@
+"""Property tests for the u32-limb 64-bit arithmetic (vs python ints)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import u64
+
+M64 = (1 << 64) - 1
+
+u64_ints = st.integers(min_value=0, max_value=M64)
+shift_amounts = st.integers(min_value=0, max_value=63)
+
+
+def as_pair(v):
+    return u64.const64(v)
+
+
+def as_int(pair):
+    return u64.join64(np.asarray(pair[0]), np.asarray(pair[1]))
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64_ints, u64_ints)
+def test_add64(a, b):
+    assert as_int(u64.add64(as_pair(a), as_pair(b))) == (a + b) & M64
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64_ints, u64_ints)
+def test_sub64(a, b):
+    assert as_int(u64.sub64(as_pair(a), as_pair(b))) == (a - b) & M64
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64_ints, u64_ints)
+def test_mul64(a, b):
+    assert as_int(u64.mul64(as_pair(a), as_pair(b))) == (a * b) & M64
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=0, max_value=(1 << 32) - 1),
+       st.integers(min_value=0, max_value=(1 << 32) - 1))
+def test_mul32_wide_exact(a, b):
+    hi, lo = u64.mul32_wide(u64.to_u32(a), u64.to_u32(b))
+    assert (int(hi) << 32) | int(lo) == a * b
+
+
+@settings(max_examples=100, deadline=None)
+@given(u64_ints, u64_ints)
+def test_xor64(a, b):
+    assert as_int(u64.xor64(as_pair(a), as_pair(b))) == a ^ b
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64_ints, shift_amounts)
+def test_shr64(a, n):
+    assert as_int(u64.shr64(as_pair(a), n)) == (a >> n)
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64_ints, shift_amounts)
+def test_shl64(a, n):
+    assert as_int(u64.shl64(as_pair(a), n)) == (a << n) & M64
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=0, max_value=(1 << 32) - 1),
+       st.integers(min_value=0, max_value=31))
+def test_ror32(x, r):
+    got = int(u64.ror32(u64.to_u32(x), u64.to_u32(r)))
+    exp = ((x >> r) | (x << (32 - r))) & 0xFFFFFFFF
+    assert got == exp
+
+
+def test_vectorized_mul_matches_scalar(rng):
+    a = rng.integers(0, 1 << 64, 512, dtype=np.uint64)
+    b = rng.integers(0, 1 << 64, 512, dtype=np.uint64)
+    pair_a = (jnp.asarray((a >> 32).astype(np.uint32)), jnp.asarray(a.astype(np.uint32)))
+    pair_b = (jnp.asarray((b >> 32).astype(np.uint32)), jnp.asarray(b.astype(np.uint32)))
+    hi, lo = u64.mul64(pair_a, pair_b)
+    got = (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(lo).astype(np.uint64)
+    assert np.array_equal(got, a * b)
+
+
+def test_eq64():
+    assert bool(u64.eq64(as_pair(5), as_pair(5)))
+    assert not bool(u64.eq64(as_pair(5), as_pair(6)))
+    assert not bool(u64.eq64(as_pair(5), as_pair(5 + (1 << 32))))
