@@ -1,0 +1,19 @@
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test test-fast bench bench-smoke install-dev
+
+install-dev:
+	$(PY) -m pip install -e ".[test]"
+
+test:              ## tier-1 suite
+	$(PY) -m pytest -x -q
+
+test-fast:         ## tier-1 minus the slow end-to-end tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:             ## full benchmark battery (CSV to stdout)
+	$(PY) -m benchmarks.run
+
+bench-smoke:       ## CI-sized throughput smoke (backend bit-parity + timing)
+	$(PY) -m benchmarks.throughput

@@ -18,16 +18,19 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
+from repro.core import engine
 from repro.kernels import ops
 
 T_STEPS = 4096
 HBM_BW = 819e9
 
 
-@functools.partial(jax.jit, static_argnames=("s", "t", "mode", "deco"))
-def _bulk(s: int, t: int, mode: str, deco: str = "splitmix64"):
+@functools.partial(jax.jit, static_argnames=("s", "t", "mode", "deco",
+                                             "backend"))
+def _bulk(s: int, t: int, mode: str, deco: str = "splitmix64",
+          backend: str = "ref"):
     return ops.thundering_bulk(seed=7, num_streams=s, num_steps=t,
-                               mode=mode, use_kernel=False, deco=deco)
+                               mode=mode, deco=deco, backend=backend)
 
 
 def run(out):
@@ -51,6 +54,37 @@ def run(out):
     gs = 2048 * T_STEPS / sec32 / 1e9
     out(row("throughput/ctr_fmix32/S=2048", sec32 * 1e6,
             f"{gs:.3f} GSample/s host x{sec64 / sec32:.2f} vs splitmix64"))
+    # engine dispatch overhead: same plan through ref vs xla backends
+    sec_ref = time_fn(_bulk, 2048, T_STEPS, "ctr", "splitmix64", "ref",
+                      iters=3)
+    sec_xla = time_fn(_bulk, 2048, T_STEPS, "ctr", "splitmix64", "xla",
+                      iters=3)
+    out(row("throughput/engine_xla/S=2048", sec_xla * 1e6,
+            f"{2048 * T_STEPS / sec_xla / 1e9:.3f} GSample/s host "
+            f"x{sec_ref / sec_xla:.2f} vs ref backend"))
     out(row("throughput/tpu_projection", 0.0,
             f"bulk HBM-bound {HBM_BW / 4 / 1e9:.0f} GSample/s/chip;"
             f" paper FPGA 655 Gnum/s"))
+
+
+def smoke(out=print) -> None:
+    """CI-sized sanity run: one small block per backend, bit-equal check."""
+    import numpy as np
+
+    plan = engine.make_plan(seed=7, num_streams=256, num_steps=64)
+    base = np.asarray(engine.generate(plan, backend="ref"))
+    for backend in ("xla", "pallas"):
+        sec = time_fn(functools.partial(engine.generate, plan,
+                                        backend=backend), iters=1)
+        same = np.array_equal(base, np.asarray(engine.generate(
+            plan, backend=backend)))
+        assert same, f"{backend} disagrees with ref"
+        out(row(f"smoke/{backend}", sec * 1e6, "bit-equal to ref"))
+    sec = time_fn(functools.partial(engine.generate_sharded, plan), iters=1)
+    assert np.array_equal(base, np.asarray(engine.generate_sharded(plan)))
+    out(row("smoke/sharded", sec * 1e6,
+            f"bit-equal over {len(jax.devices())} device(s)"))
+
+
+if __name__ == "__main__":
+    smoke()

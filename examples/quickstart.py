@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stream
+from repro.core import engine, stream
 from repro.core.statistics import inter_stream_report
 from repro.kernels import ops
 
@@ -44,3 +44,13 @@ print(f"max pairwise |pearson| over 6 streams: {rep['max_pearson']:.5f}")
 x = jnp.ones((16, 256))
 y = ops.fused_dropout(x, s_dropout, rate=0.3)
 print("fused dropout kept:", float((np.asarray(y) != 0).mean()))
+
+# --- 6. the engine underneath: one plan, any backend, any mesh --------------
+plan = engine.make_plan(seed=42, num_streams=256, num_steps=64)
+a = engine.generate(plan, backend="xla")
+b = engine.generate(plan, backend="pallas")      # interpret=True on CPU
+c = engine.generate_sharded(plan)                # shard_map over all devices
+assert np.array_equal(np.asarray(a), np.asarray(b))
+assert np.array_equal(np.asarray(a), np.asarray(c))
+print(f"engine backends {engine.available_backends()} bit-identical, "
+      f"sharded over {len(jax.devices())} device(s)")

@@ -1,0 +1,442 @@
+"""Unified RNG engine: one backend-dispatched generation substrate.
+
+The paper's architecture is a *plan*, not an implementation: one shared
+root-state generator (RSGU) feeds any number of cheap per-stream output
+units (SOU + decorrelator).  This module makes that split explicit in
+software.  A ``GenPlan`` describes WHAT to generate —
+
+  (x0, h-table, counter window, (T, S) shape, decorrelator mode)
+
+— and a pluggable backend decides HOW:
+
+  * ``"ref"``     the pure-jnp oracles in ``repro.kernels.ref`` (validated
+                  against the numpy golden; slow, simple, always right),
+  * ``"xla"``     the engine's own fused elementwise arithmetic (what
+                  ``stream.random_bits`` always compiled to),
+  * ``"pallas"``  the tiled TPU kernels in ``repro.kernels.thundering_block``
+                  (``interpret=True`` on CPU, Mosaic on TPU).
+
+All backends are bit-exact for both decorrelator modes, so the choice is
+purely a performance decision; ``select_backend`` picks one from the plan
+shape and platform, and every entry point takes a per-call override.
+
+``generate_sharded`` is the multi-device analogue of the paper's instance
+scaling: the (T, S) block is split over a mesh by the stream axis with
+``shard_map``.  Because every element is counter-addressable — a pure
+function of (x0, h_s, ctr + t) — each device generates its column slice
+from the replicated root state with ZERO cross-device communication,
+exactly as adding SOU instances on the FPGA costs no extra root-generator
+hardware.
+
+This module is the single home of the shared plumbing that used to be
+re-implemented by ``core/stream.py``, ``kernels/ops.py`` and the
+benchmarks: family/leaf-offset derivation (``family_from_seed``,
+``derive_leaf``, ``leaf_table``), root-state/counter-row expansion
+(``root_and_ctr_rows``) and the xorshift128 start-state prep for the
+faithful decorrelator.
+
+Import layering: ``engine`` sits in ``repro.core`` and imports only the
+arithmetic cores (lcg/splitmix/u64/xorshift); the kernel modules are
+imported lazily inside backends.  ``stream.py`` and ``kernels/ops.py``
+import the engine, never the other way around.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lcg, splitmix, u64, xorshift
+from repro.core.u64 import U32, U64Pair
+
+DEFAULT_BLOCK_T = 256
+DEFAULT_BLOCK_S = 512
+
+_M64 = (1 << 64) - 1
+
+
+# ---------------------------------------------------------------------------
+# Family / leaf-offset derivation (the ONE copy; stream.derive and
+# ops.h_table used to each have their own)
+# ---------------------------------------------------------------------------
+
+def family_from_seed(seed: int, purpose: int = 0) -> Tuple[U64Pair, U64Pair]:
+    """(x0, h_family) for a python-int seed.
+
+    ``x0`` is the shared root base state (one per family — the paper's
+    RSGU seed); ``h_family`` is the family's even leaf offset from which
+    per-stream offsets derive.  ``purpose`` selects disjoint h families
+    over the same root (e.g. the x/y coordinate streams of the MC apps).
+    """
+    x0 = splitmix.splitmix64_host(seed & _M64, 0x1234)
+    h = (splitmix.splitmix64_host(seed, purpose) << 1) & _M64
+    x0_hi, x0_lo = (u64.to_u32(v) for v in u64.const64(x0))
+    h_hi, h_lo = (u64.to_u32(v) for v in u64.const64(h))
+    return (x0_hi, x0_lo), (h_hi, h_lo)
+
+
+def derive_leaf(h_parent: U64Pair, tag: U64Pair) -> U64Pair:
+    """Child leaf offset: splitmix64(h_parent, tag) forced even (<< 1).
+
+    Even offsets keep the Hull-Dobell full-period condition (lcg.py doc);
+    splitmix keeps distinct tags in distinct streams.  ``tag`` limbs may
+    be scalars or vectors (broadcast against ``h_parent``).
+    """
+    return u64.shl64(splitmix.splitmix64(h_parent, tag), 1)
+
+
+def leaf_table(h_family: U64Pair, num_streams: int) -> U64Pair:
+    """(S,) even leaf offsets h_s for streams 0..S-1 of a family."""
+    sid = jnp.arange(num_streams, dtype=U32)
+    return derive_leaf((jnp.broadcast_to(h_family[0], sid.shape),
+                        jnp.broadcast_to(h_family[1], sid.shape)),
+                       (jnp.zeros_like(sid), sid))
+
+
+# ---------------------------------------------------------------------------
+# GenPlan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GenPlan:
+    """One bulk generation request: a (T, S) uint32 block.
+
+    x0        (hi, lo) scalar root base state (may be traced).
+    h         (hi, lo) arrays of shape (S,): per-stream leaf offsets.
+    num_steps T, the time extent.
+    ctr       (hi, lo) scalar counter start (may be traced).
+    offset    the counter start as a static python int when known at
+              trace time (enables host-exact xorshift jumps for the
+              faithful decorrelator), else None.
+    mode      "ctr" (counter decorrelator, pure map) or "faithful"
+              (paper's serial xorshift128 decorrelator).
+    deco      ctr-mode hash: "splitmix64" (default) or "fmix32".
+    """
+    x0: U64Pair
+    h: U64Pair
+    num_steps: int
+    ctr: U64Pair
+    offset: Optional[int] = 0
+    mode: str = "ctr"
+    deco: str = "splitmix64"
+
+    @property
+    def num_streams(self) -> int:
+        return int(self.h[0].shape[0])
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.num_steps, self.num_streams)
+
+
+def make_plan(*, seed: int, num_streams: int, num_steps: int, offset: int = 0,
+              purpose: int = 0, mode: str = "ctr",
+              deco: str = "splitmix64") -> GenPlan:
+    """Plan for a (T, S) block of the family derived from ``seed``."""
+    x0, h_fam = family_from_seed(seed, purpose)
+    ch, cl = u64.const64(offset)
+    return GenPlan(x0=x0, h=leaf_table(h_fam, num_streams),
+                   num_steps=num_steps, ctr=(u64.to_u32(ch), u64.to_u32(cl)),
+                   offset=offset, mode=mode, deco=deco)
+
+
+def plan_for_stream(stream, num_steps: int, mode: str = "ctr",
+                    deco: str = "splitmix64") -> GenPlan:
+    """Plan for ``num_steps`` elements of ONE ThunderStream (S = 1).
+
+    The stream's counter is traced state, so ``offset`` is None; backends
+    that need host-exact jumps fall back to traced GF(2) jumps.
+    """
+    return GenPlan(x0=(stream.x0_hi, stream.x0_lo),
+                   h=(jnp.reshape(stream.h_hi, (1,)),
+                      jnp.reshape(stream.h_lo, (1,))),
+                   num_steps=num_steps,
+                   ctr=(stream.ctr_hi, stream.ctr_lo),
+                   offset=None, mode=mode, deco=deco)
+
+
+# ---------------------------------------------------------------------------
+# Shared prep helpers
+# ---------------------------------------------------------------------------
+
+def root_and_ctr_rows(x0: U64Pair, ctr: U64Pair, num_steps: int
+                      ) -> Tuple[U64Pair, U64Pair]:
+    """((T,) root states for ctr+1..ctr+T, (T,) per-row counters ctr+t)."""
+    roots = lcg.root_states_vector(x0, ctr, num_steps)
+    t_idx = jnp.arange(num_steps, dtype=U32)
+    ctr_rows = u64.add64((jnp.broadcast_to(ctr[0], t_idx.shape),
+                          jnp.broadcast_to(ctr[1], t_idx.shape)),
+                         (jnp.zeros_like(t_idx), t_idx))
+    return roots, ctr_rows
+
+
+def _faithful_start_states(plan: GenPlan) -> jnp.ndarray:
+    """(S, 4) xorshift128 states of substreams 0..S-1 advanced to plan.ctr.
+
+    Static offsets use the host-exact GF(2) jump (trace-time constants);
+    traced counters use the in-graph jump (bit-identical; see
+    tests/test_xorshift.py::test_jump_traced_matches_host).
+    """
+    S = plan.num_streams
+    tbl = xorshift.lane_table(S)
+    if plan.offset is not None:
+        if plan.offset:
+            tbl = np.stack([
+                np.asarray(xorshift.jump(tuple(int(w) for w in tbl[s]),
+                                         plan.offset), np.uint32)
+                for s in range(S)])
+        return jnp.asarray(tbl)
+    return xorshift.jump_traced(jnp.asarray(tbl), plan.ctr[0], plan.ctr[1])
+
+
+def _faithful_tile_states(plan: GenPlan, block_t: int, n_tiles: int,
+                          xs0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(n_tiles, 4, S) per-(row-tile, stream) xorshift start states.
+
+    When ``xs0`` is given — (S, 4) states already advanced to plan.ctr,
+    carrying GLOBAL substream identity (the sharded case) — tile states
+    are derived from it with relative traced jumps instead of rebuilding
+    the lane table from local indices.
+    """
+    S = plan.num_streams
+    if xs0 is not None:
+        def tile_from(i):
+            off = u64.mul32_wide(i, U32(block_t))
+            return xorshift.jump_traced(xs0, off[0], off[1])  # (S, 4)
+
+        states = jax.vmap(tile_from)(jnp.arange(n_tiles, dtype=U32))
+        return jnp.transpose(states, (0, 2, 1))  # (n_tiles, 4, S)
+    if plan.offset is not None:
+        tbl = xorshift.lane_table(S)
+        states = np.empty((n_tiles, 4, S), np.uint32)
+        for s in range(S):
+            st = tuple(int(w) for w in tbl[s])
+            if plan.offset:
+                st = xorshift.jump(st, plan.offset)
+            for i in range(n_tiles):
+                states[i, :, s] = st
+                st = xorshift.jump(st, block_t)
+        return jnp.asarray(states)
+    tbl = jnp.asarray(xorshift.lane_table(S))  # (S, 4)
+
+    def tile(i):
+        off = u64.add64(plan.ctr, u64.mul32_wide(i, U32(block_t)))
+        return xorshift.jump_traced(tbl, off[0], off[1])  # (S, 4)
+
+    states = jax.vmap(tile)(jnp.arange(n_tiles, dtype=U32))
+    return jnp.transpose(states, (0, 2, 1))  # (n_tiles, 4, S)
+
+
+def _leaf_permuted(roots: U64Pair, h: U64Pair) -> jnp.ndarray:
+    """XSH_RR(root_t + h_s): (T,) roots x (S,) offsets -> (T, S) uint32."""
+    leaf = u64.add64((roots[0][:, None], roots[1][:, None]),
+                     (h[0][None, :], h[1][None, :]))
+    return lcg.xsh_rr(leaf)
+
+
+def _deco_fn(deco: str) -> Callable[[U64Pair, U64Pair], jnp.ndarray]:
+    if deco == "splitmix64":
+        return splitmix.ctr_decorrelator
+    if deco == "fmix32":
+        return splitmix.ctr_decorrelator32
+    raise ValueError(f"unknown deco {deco!r}")
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Callable] = {}
+
+
+def register_backend(name: str):
+    """Decorator: register fn(plan, *, block_t, block_s, xs0) -> (T, S)."""
+    def deco(fn):
+        _BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def use_interpret() -> bool:
+    """True when Pallas kernels must run under the interpreter (no TPU)."""
+    return jax.default_backend() != "tpu"
+
+
+@register_backend("ref")
+def _ref_backend(plan: GenPlan, *, block_t: int, block_s: int,
+                 xs0: Optional[jnp.ndarray]) -> jnp.ndarray:
+    from repro.kernels import ref
+    if plan.mode == "ctr":
+        return ref.thundering_block_ctr(plan.x0, plan.h, plan.num_steps,
+                                        plan.ctr, deco=plan.deco)
+    if plan.mode == "faithful":
+        if xs0 is None:
+            xs0 = _faithful_start_states(plan)
+        return ref.thundering_block_faithful(plan.x0, plan.h, plan.num_steps,
+                                             xs0, plan.ctr)
+    raise ValueError(f"unknown mode {plan.mode!r}")
+
+
+@register_backend("xla")
+def _xla_backend(plan: GenPlan, *, block_t: int, block_s: int,
+                 xs0: Optional[jnp.ndarray]) -> jnp.ndarray:
+    T, S = plan.shape
+    roots, ctr_rows = root_and_ctr_rows(plan.x0, plan.ctr, T)
+    permuted = _leaf_permuted(roots, plan.h)
+    if plan.mode == "ctr":
+        dec = _deco_fn(plan.deco)(
+            (jnp.broadcast_to(plan.h[0][None, :], (T, S)),
+             jnp.broadcast_to(plan.h[1][None, :], (T, S))),
+            (jnp.broadcast_to(ctr_rows[0][:, None], (T, S)),
+             jnp.broadcast_to(ctr_rows[1][:, None], (T, S))))
+        return permuted ^ dec
+    if plan.mode == "faithful":
+        if xs0 is None:
+            xs0 = _faithful_start_states(plan)
+
+        def body(state, perm_row):
+            x, y, z, w = (state[..., i] for i in range(4))
+            x, y, z, w = xorshift.step_xyzw(x, y, z, w)
+            return jnp.stack([x, y, z, w], -1), perm_row ^ w
+
+        _, out = jax.lax.scan(body, xs0, permuted)
+        return out
+    raise ValueError(f"unknown mode {plan.mode!r}")
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@register_backend("pallas")
+def _pallas_backend(plan: GenPlan, *, block_t: int, block_s: int,
+                    xs0: Optional[jnp.ndarray]) -> jnp.ndarray:
+    from repro.kernels import thundering_block as _tb
+    T = plan.num_steps
+    roots, ctr_rows = root_and_ctr_rows(plan.x0, plan.ctr, T)
+    if plan.mode == "ctr":
+        return _tb.block_ctr(roots, ctr_rows, plan.h, block_t=block_t,
+                             block_s=block_s, interpret=use_interpret(),
+                             deco=plan.deco)
+    if plan.mode == "faithful":
+        bt = min(block_t, _pad_to(T, 8))
+        n_tiles = -(-T // bt)
+        states = _faithful_tile_states(plan, bt, n_tiles, xs0)
+        return _tb.block_faithful(roots, plan.h, states, block_t=bt,
+                                  block_s=block_s,
+                                  interpret=use_interpret())
+    raise ValueError(f"unknown mode {plan.mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def select_backend(plan: GenPlan, block_t: int = DEFAULT_BLOCK_T,
+                   block_s: int = DEFAULT_BLOCK_S) -> str:
+    """Heuristic backend choice.
+
+    On TPU, tile-friendly shapes (at least one VPU tile of work) go to the
+    Pallas kernels; everything else — and everything on CPU, where the
+    kernels only run under the interpreter — compiles through plain XLA.
+    ``"ref"`` is never auto-selected; it is the oracle, asked for by name.
+    """
+    T, S = plan.shape
+    if jax.default_backend() == "tpu" and S >= 128 and T >= 8:
+        return "pallas"
+    return "xla"
+
+
+def generate(plan: GenPlan, *, backend: Optional[str] = None,
+             block_t: int = DEFAULT_BLOCK_T, block_s: int = DEFAULT_BLOCK_S,
+             xs0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(T, S) uint32 MISRN block for ``plan``, time-major.
+
+    ``backend`` overrides ``select_backend``; ``xs0`` optionally supplies
+    pre-advanced (S, 4) xorshift start states for faithful mode (used by
+    ``generate_sharded``, where substream identity follows the GLOBAL
+    stream index, not the local shard).
+    """
+    name = backend or select_backend(plan, block_t, block_s)
+    try:
+        fn = _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; have {available_backends()}")
+    return fn(plan, block_t=block_t, block_s=block_s, xs0=xs0)
+
+
+def generate_flat(plan: GenPlan, *, backend: Optional[str] = None,
+                  block_t: int = DEFAULT_BLOCK_T,
+                  block_s: int = DEFAULT_BLOCK_S) -> jnp.ndarray:
+    """(T,) uint32 vector for a single-stream plan (S must be 1)."""
+    if plan.num_streams != 1:
+        raise ValueError(f"generate_flat needs S=1, got S={plan.num_streams}")
+    return generate(plan, backend=backend, block_t=block_t,
+                    block_s=block_s)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Multi-device fan-out
+# ---------------------------------------------------------------------------
+
+def default_mesh(axis_name: str = "streams") -> jax.sharding.Mesh:
+    """1-D mesh over every local device, stream axis last."""
+    return jax.sharding.Mesh(np.array(jax.devices()), (axis_name,))
+
+
+def generate_sharded(plan: GenPlan, *, mesh: Optional[jax.sharding.Mesh] = None,
+                     axis_name: str = "streams",
+                     backend: Optional[str] = None,
+                     block_t: int = DEFAULT_BLOCK_T,
+                     block_s: int = DEFAULT_BLOCK_S) -> jnp.ndarray:
+    """(T, S) block computed with the stream axis sharded over ``mesh``.
+
+    The software analogue of the paper's SOU instance scaling: the root
+    state (x0, ctr) is replicated — it is two u32 scalars, the paper's
+    "one multiplier" — and each device derives its own column slice by
+    counter addressing.  No collective appears in the compiled program;
+    the result is bit-identical to ``generate`` on one device.
+
+    S is padded up to a multiple of the mesh size and sliced back.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if mesh is None:
+        mesh = default_mesh(axis_name)
+    if axis_name not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis_name!r}")
+    n_dev = mesh.shape[axis_name]
+    T, S = plan.shape
+    Sp = _pad_to(S, n_dev)
+
+    h_hi = jnp.pad(plan.h[0], (0, Sp - S))
+    h_lo = jnp.pad(plan.h[1], (0, Sp - S))
+    operands = [h_hi, h_lo]
+    in_specs = [P(axis_name), P(axis_name)]
+    if plan.mode == "faithful":
+        # substream identity follows the global stream index: prep the
+        # full (Sp, 4) start-state table once, shard it with h.
+        padded = dataclasses.replace(plan, h=(h_hi, h_lo))
+        xs0 = _faithful_start_states(padded)
+        operands.append(xs0)
+        in_specs.append(P(axis_name, None))
+
+    def local(hh, hl, *rest):
+        lp = dataclasses.replace(plan, h=(hh, hl))
+        lxs0 = rest[0] if rest else None
+        return generate(lp, backend=backend or "xla", block_t=block_t,
+                        block_s=block_s, xs0=lxs0)
+
+    out = shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=P(None, axis_name), check_rep=False)(*operands)
+    return out[:, :S]

@@ -36,10 +36,8 @@ from typing import NamedTuple, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import lcg, splitmix, u64
+from repro.core import engine, u64
 from repro.core.u64 import U32
-
-_BLOCK = 256  # static inner block for jump-ahead vectorization
 
 
 class ThunderStream(NamedTuple):
@@ -54,13 +52,10 @@ class ThunderStream(NamedTuple):
 
 def new_stream(seed: int, stream_id: int = 0) -> ThunderStream:
     """Create the root stream of a family from a python-int seed."""
-    x0 = splitmix.splitmix64_host(seed & ((1 << 64) - 1), 0x1234)
-    h = (splitmix.splitmix64_host(seed, stream_id) << 1) & ((1 << 64) - 1)
     # jnp (not numpy) scalars: stream fields are pytree leaves that flow
     # through jit/scan; numpy-scalar host arithmetic would emit overflow
     # warnings (wrapping is intended).
-    x0_hi, x0_lo = (u64.to_u32(v) for v in u64.const64(x0))
-    h_hi, h_lo = (u64.to_u32(v) for v in u64.const64(h))
+    (x0_hi, x0_lo), (h_hi, h_lo) = engine.family_from_seed(seed, stream_id)
     zero = jnp.zeros((), U32)
     return ThunderStream(x0_hi, x0_lo, h_hi, h_lo, zero, zero)
 
@@ -75,8 +70,7 @@ def derive(stream: ThunderStream, tag) -> ThunderStream:
     else:
         t_hi = jnp.zeros((), U32)
         t_lo = jnp.asarray(tag).astype(U32)
-    mixed = splitmix.splitmix64((stream.h_hi, stream.h_lo), (t_hi, t_lo))
-    h_hi, h_lo = u64.shl64(mixed, 1)  # force even
+    h_hi, h_lo = engine.derive_leaf((stream.h_hi, stream.h_lo), (t_hi, t_lo))
     zero = jnp.zeros((), U32)
     return ThunderStream(stream.x0_hi, stream.x0_lo, h_hi, h_lo, zero, zero)
 
@@ -95,26 +89,16 @@ def advance(stream: ThunderStream, count: int) -> ThunderStream:
 # Generation
 # ----------------------------------------------------------------------------
 
-def _root_states(stream: ThunderStream, n: int):
-    """Root states for positions ctr+1 .. ctr+n (see lcg.root_states_vector)."""
-    return lcg.root_states_vector((stream.x0_hi, stream.x0_lo),
-                                  (stream.ctr_hi, stream.ctr_lo), n, _BLOCK)
-
-
 def random_bits(stream: ThunderStream, shape: Tuple[int, ...]) -> jnp.ndarray:
-    """uint32 bits of the given shape, elements ctr..ctr+N-1 of the stream."""
+    """uint32 bits of the given shape, elements ctr..ctr+N-1 of the stream.
+
+    Routed through the unified engine as a (N, 1) single-stream plan; the
+    backend is auto-selected (XLA elementwise off-TPU — the arithmetic
+    this function always compiled to).
+    """
     n = int(math.prod(shape)) if shape else 1
-    r_hi, r_lo = _root_states(stream, n)
-    leaf = u64.add64((r_hi, r_lo), (stream.h_hi, stream.h_lo))
-    permuted = lcg.xsh_rr(leaf)
-    # counter-based decorrelator
-    idx = jnp.arange(n, dtype=U32)
-    ctr = u64.add64((stream.ctr_hi, stream.ctr_lo),
-                    (jnp.zeros_like(idx), idx))
-    deco = splitmix.ctr_decorrelator(
-        (jnp.broadcast_to(stream.h_hi, (n,)),
-         jnp.broadcast_to(stream.h_lo, (n,))), ctr)
-    return (permuted ^ deco).reshape(shape)
+    plan = engine.plan_for_stream(stream, n)
+    return engine.generate_flat(plan).reshape(shape)
 
 
 def uniform(stream: ThunderStream, shape=(), dtype=jnp.float32,
@@ -135,10 +119,29 @@ def normal(stream: ThunderStream, shape=(), dtype=jnp.float32) -> jnp.ndarray:
 
 
 def bernoulli(stream: ThunderStream, p, shape=()) -> jnp.ndarray:
-    """Boolean mask with P(True) = p, from raw 32-bit threshold compare."""
+    """Boolean mask with P(True) = p, from raw 32-bit threshold compare.
+
+    For a host-side ``p`` the threshold round(p * 2**32) is computed with
+    exact python-int arithmetic (float32 would wrap or lose the low bits
+    for p near 1), with p <= 0 / p >= 1 short-circuiting to constant
+    masks.  A traced ``p`` is clamped to [0, 1] and converted at float32
+    precision, with the endpoints still exact.
+    """
+    if isinstance(p, (bool, int, float)):
+        pf = float(p)
+        if pf <= 0.0:
+            return jnp.zeros(shape, bool)
+        if pf >= 1.0:
+            return jnp.ones(shape, bool)
+        thresh = min(int(round(pf * (1 << 32))), (1 << 32) - 1)
+        return random_bits(stream, shape) < U32(thresh)
     bits = random_bits(stream, shape)
-    thresh = jnp.asarray(p * (2.0 ** 32), jnp.float32).astype(U32)
-    return bits < thresh
+    p32 = jnp.clip(jnp.asarray(p, jnp.float32), 0.0, 1.0)
+    # 4294967040 = 2**32 - 256, the largest float32 below 2**32 (a float32
+    # clip bound of 2**32 - 1 would round up and wrap the uint32 cast).
+    thresh = jnp.clip(p32 * jnp.float32(2.0 ** 32), 0.0,
+                      jnp.float32(4294967040.0)).astype(U32)
+    return jnp.where(p32 >= 1.0, True, bits < thresh)
 
 
 def gumbel(stream: ThunderStream, shape=(), dtype=jnp.float32) -> jnp.ndarray:

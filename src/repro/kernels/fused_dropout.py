@@ -24,6 +24,16 @@ from repro.core import lcg, splitmix, u64
 from repro.core.u64 import U32
 
 
+def keep_threshold(rate: float) -> int:
+    """uint32 keep threshold for a drop rate: round((1-rate) * 2**32).
+
+    Computed with exact host-int arithmetic and clamped to 2**32 - 1 so a
+    tiny positive rate cannot round up to 2**32 and wrap to an all-drop
+    threshold (the same precision trap as stream.bernoulli near p=1).
+    """
+    return min(int(round((1.0 - rate) * (1 << 32))), (1 << 32) - 1)
+
+
 def _kernel(x_ref, rb_hi_ref, rb_lo_ref, cb_hi_ref, cb_lo_ref,
             h_hi_ref, h_lo_ref, a_hi_ref, a_lo_ref, c_hi_ref, c_lo_ref,
             o_ref, *, thresh: int, scale: float, n_cols: int):
@@ -81,7 +91,7 @@ def fused_dropout_2d(x: jnp.ndarray, h, x0, ctr0, rate: float,
     At = (jnp.asarray(A_hi[1:]).reshape(bm, N), jnp.asarray(A_lo[1:]).reshape(bm, N))
     Ct = (jnp.asarray(C_hi[1:]).reshape(bm, N), jnp.asarray(C_lo[1:]).reshape(bm, N))
 
-    thresh = int(round((1.0 - rate) * (1 << 32))) & 0xFFFFFFFF
+    thresh = keep_threshold(rate)
     scale = 1.0 / (1.0 - rate)
 
     col = lambda v: v.reshape(n_tiles, 1)

@@ -1,8 +1,10 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the unified RNG engine and Pallas kernels.
 
-On CPU (this container) kernels run under ``interpret=True`` — the kernel
-body executes in Python/XLA exactly as written, which is how correctness
-is validated offline; on TPU the same code lowers through Mosaic.
+All bulk generation is expressed as an ``engine.GenPlan`` and dispatched
+through ``repro.core.engine`` — the same plan runs on the "ref" (jnp
+oracle), "xla" (fused elementwise) and "pallas" (tiled kernel) backends
+bit-identically.  On CPU (this container) the Pallas backend runs under
+``interpret=True``; on TPU the same code lowers through Mosaic.
 
 Entry points:
   * ``thundering_bulk``   — (T, S) bulk MISRN block, mode "ctr"/"faithful"
@@ -17,88 +19,47 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import lcg, splitmix, stream as stream_mod, u64, xorshift
+from repro.core import engine, stream as stream_mod
 from repro.core.u64 import U32
 from repro.kernels import fused_dropout as _fd
 from repro.kernels import mc as _mc
-from repro.kernels import thundering_block as _tb
 
 
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+_use_interpret = engine.use_interpret
 
 
 def h_table(seed: int, num_streams: int, purpose: int = 0
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(S,) even leaf offsets h_s, derived the same way ThunderStream.derive
-    does (splitmix of (family h, index)), so bulk blocks and the stream API
-    live in the same MISRN family."""
-    fam = stream_mod.new_stream(seed, purpose)
-    sid = jnp.arange(num_streams, dtype=U32)
-    mixed = splitmix.splitmix64(
-        (jnp.broadcast_to(fam.h_hi, sid.shape),
-         jnp.broadcast_to(fam.h_lo, sid.shape)),
-        (jnp.zeros_like(sid), sid))
-    return u64.shl64(mixed, 1)
-
-
-def _roots_and_ctr(x0, offset: int, num_steps: int):
-    ctr = u64.const64(offset)
-    roots = lcg.root_states_vector(x0, ctr, num_steps)
-    t_idx = jnp.arange(num_steps, dtype=U32)
-    ctr_rows = u64.add64((jnp.broadcast_to(ctr[0], t_idx.shape),
-                          jnp.broadcast_to(ctr[1], t_idx.shape)),
-                         (jnp.zeros_like(t_idx), t_idx))
-    return roots, ctr_rows
+    does (one shared helper: engine.derive_leaf), so bulk blocks and the
+    stream API live in the same MISRN family."""
+    _, h_fam = engine.family_from_seed(seed, purpose)
+    return engine.leaf_table(h_fam, num_streams)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "num_streams", "num_steps", "mode", "offset", "seed", "block_t",
-    "block_s", "use_kernel", "deco"))
+    "block_s", "use_kernel", "deco", "backend"))
 def thundering_bulk(*, seed: int, num_streams: int, num_steps: int,
                     mode: str = "ctr", offset: int = 0,
-                    block_t: int = _tb.DEFAULT_BLOCK_T,
-                    block_s: int = _tb.DEFAULT_BLOCK_S,
+                    block_t: int = engine.DEFAULT_BLOCK_T,
+                    block_s: int = engine.DEFAULT_BLOCK_S,
                     use_kernel: bool = True,
-                    deco: str = "splitmix64") -> jnp.ndarray:
-    """(num_steps, num_streams) uint32 MISRN block (time-major)."""
-    fam = stream_mod.new_stream(seed, 0)
-    x0 = (fam.x0_hi, fam.x0_lo)
-    h = h_table(seed, num_streams)
-    roots, ctr_rows = _roots_and_ctr(x0, offset, num_steps)
-    if mode == "ctr":
-        if not use_kernel:
-            from repro.kernels import ref
-            return ref.thundering_block_ctr(x0, h, num_steps,
-                                            u64.const64(offset), deco=deco)
-        return _tb.block_ctr(roots, ctr_rows, h, block_t=block_t,
-                             block_s=block_s, interpret=_use_interpret(),
-                             deco=deco)
-    elif mode == "faithful":
-        bt = min(block_t, -(-num_steps // 8) * 8)
-        n_tiles = -(-num_steps // bt)
-        # per-(tile, stream) xorshift state: substream s jumped by
-        # offset + i*bt (host-side exact GF(2) jumps; trace-time constants)
-        tbl = xorshift.lane_table(num_streams)
-        states = np.empty((n_tiles, 4, num_streams), np.uint32)
-        for s in range(num_streams):
-            st = tuple(int(w) for w in tbl[s])
-            if offset:
-                st = xorshift.jump(st, offset)
-            for i in range(n_tiles):
-                states[i, :, s] = st
-                st = xorshift.jump(st, bt)
-        if not use_kernel:
-            from repro.kernels import ref
-            return ref.thundering_block_faithful(
-                x0, h, num_steps, jnp.asarray(states[0]).T,
-                u64.const64(offset))
-        return _tb.block_faithful(roots, h, jnp.asarray(states),
-                                  block_t=bt, block_s=block_s,
-                                  interpret=_use_interpret())
-    raise ValueError(mode)
+                    deco: str = "splitmix64",
+                    backend: Optional[str] = None) -> jnp.ndarray:
+    """(num_steps, num_streams) uint32 MISRN block (time-major).
+
+    ``backend`` names an engine backend explicitly; otherwise
+    ``use_kernel`` keeps its historical meaning (True -> "pallas",
+    False -> "ref").
+    """
+    plan = engine.make_plan(seed=seed, num_streams=num_streams,
+                            num_steps=num_steps, offset=offset, mode=mode,
+                            deco=deco)
+    be = backend or ("pallas" if use_kernel else "ref")
+    return engine.generate(plan, backend=be, block_t=block_t,
+                           block_s=block_s)
 
 
 def fused_dropout(x: jnp.ndarray, stream: stream_mod.ThunderStream,
@@ -108,6 +69,8 @@ def fused_dropout(x: jnp.ndarray, stream: stream_mod.ThunderStream,
 
     The same (stream, counter) always produces the same mask regardless of
     tiling/sharding — deterministic under resharding and elastic restarts.
+    The mask bits are the stream's engine plan; the kernel path fuses their
+    generation into the read-x/write-y stream (mask never hits HBM).
     """
     if rate <= 0.0:
         return x
@@ -115,15 +78,29 @@ def fused_dropout(x: jnp.ndarray, stream: stream_mod.ThunderStream,
     n = x.size
     last = shape[-1] if len(shape) >= 1 else 1
     x2 = x.reshape(n // last, last)
+    if not use_kernel:
+        plan = engine.plan_for_stream(stream, n)
+        bits = engine.generate_flat(plan).reshape(x2.shape)
+        thresh = _fd.keep_threshold(rate)
+        scale = jnp.asarray(1.0 / (1.0 - rate), x.dtype)
+        out = jnp.where(bits < U32(thresh), x2 * scale, jnp.zeros_like(x2))
+        return out.reshape(shape)
     h = (stream.h_hi, stream.h_lo)
     x0 = (stream.x0_hi, stream.x0_lo)
     ctr0 = (stream.ctr_hi, stream.ctr_lo)
-    if not use_kernel:
-        from repro.kernels import ref
-        return ref.fused_dropout(x2, h, x0, ctr0, rate).reshape(shape)
     out = _fd.fused_dropout_2d(x2, h, x0, ctr0, rate, block_m=block_m,
                                interpret=_use_interpret())
     return out.reshape(shape)
+
+
+def _mc_plans(seed: int, num_lanes: int, draws_per_lane: int,
+              purpose_x: int, purpose_y: int):
+    """Two engine plans (x/y coordinate stream families, shared root)."""
+    px = engine.make_plan(seed=seed, num_streams=num_lanes,
+                          num_steps=draws_per_lane, purpose=purpose_x)
+    py = engine.make_plan(seed=seed, num_streams=num_lanes,
+                          num_steps=draws_per_lane, purpose=purpose_y)
+    return px, py
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -134,20 +111,19 @@ def estimate_pi(*, seed: int, num_lanes: int, draws_per_lane: int,
                 block_s: int = _mc.DEFAULT_BLOCK_S,
                 use_kernel: bool = True) -> jnp.ndarray:
     """Monte-Carlo pi over num_lanes independent stream pairs (paper Fig. 8)."""
-    fam = stream_mod.new_stream(seed, 0)
-    x0 = (fam.x0_hi, fam.x0_lo)
-    hx = h_table(seed, num_lanes, purpose=1)
-    hy = h_table(seed, num_lanes, purpose=2)
-    roots, ctr_rows = _roots_and_ctr(x0, 0, draws_per_lane)
+    px, py = _mc_plans(seed, num_lanes, draws_per_lane, 1, 2)
     if use_kernel:
-        partials = _mc.pi_partials(roots, ctr_rows, hx, hy, block_t=block_t,
-                                   block_s=block_s,
+        roots, ctr_rows = engine.root_and_ctr_rows(px.x0, px.ctr,
+                                                   draws_per_lane)
+        partials = _mc.pi_partials(roots, ctr_rows, px.h, py.h,
+                                   block_t=block_t, block_s=block_s,
                                    interpret=_use_interpret())
         inside = jnp.sum(partials.astype(jnp.float32))
     else:
         from repro.kernels import ref
-        inside = jnp.sum(ref.mc_pi_partial(x0, hx, hy, draws_per_lane,
-                                           u64.const64(0)).astype(jnp.float32))
+        ux = ref.uniform_from_bits(engine.generate(px, backend="ref"))
+        uy = ref.uniform_from_bits(engine.generate(py, backend="ref"))
+        inside = jnp.sum(ref.mc_pi_from_uniforms(ux, uy).astype(jnp.float32))
     total = num_lanes * draws_per_lane
     return 4.0 * inside / total
 
@@ -162,21 +138,20 @@ def price_option(*, seed: int, num_lanes: int, draws_per_lane: int,
                  block_s: int = _mc.DEFAULT_BLOCK_S,
                  use_kernel: bool = True) -> jnp.ndarray:
     """European call price via GBM Monte-Carlo (paper Fig. 9 / Table 7)."""
-    fam = stream_mod.new_stream(seed, 0)
-    x0 = (fam.x0_hi, fam.x0_lo)
-    hx = h_table(seed, num_lanes, purpose=3)
-    hy = h_table(seed, num_lanes, purpose=4)
-    roots, ctr_rows = _roots_and_ctr(x0, 0, draws_per_lane)
+    px, py = _mc_plans(seed, num_lanes, draws_per_lane, 3, 4)
     if use_kernel:
+        roots, ctr_rows = engine.root_and_ctr_rows(px.x0, px.ctr,
+                                                   draws_per_lane)
         partials = _mc.option_partials(
-            roots, ctr_rows, hx, hy, s0=s0, strike=strike, r=r, sigma=sigma,
-            t=t, block_t=block_t, block_s=block_s,
+            roots, ctr_rows, px.h, py.h, s0=s0, strike=strike, r=r,
+            sigma=sigma, t=t, block_t=block_t, block_s=block_s,
             interpret=_use_interpret())
         payoff_sum = jnp.sum(partials)
     else:
         from repro.kernels import ref
-        payoff_sum = jnp.sum(ref.mc_option_partial(
-            x0, hx, hy, draws_per_lane, u64.const64(0), s0, strike, r,
-            sigma, t))
+        u1 = ref.uniform_from_bits(engine.generate(px, backend="ref"))
+        u2 = ref.uniform_from_bits(engine.generate(py, backend="ref"))
+        payoff_sum = jnp.sum(ref.mc_option_from_uniforms(
+            u1, u2, s0, strike, r, sigma, t))
     total = num_lanes * draws_per_lane
     return payoff_sum / total

@@ -96,10 +96,10 @@ def dropout_mask_bits(h: U64Pair, x0: U64Pair, ctr0: U64Pair,
 def fused_dropout(x: jnp.ndarray, h: U64Pair, x0: U64Pair, ctr0: U64Pair,
                   rate: float) -> jnp.ndarray:
     """Reference fused dropout: mask from ThundeRiNG bits, scaled by 1/keep."""
+    from repro.kernels.fused_dropout import keep_threshold
     bits = dropout_mask_bits(h, x0, ctr0, x.size).reshape(x.shape)
-    thresh = U32(int(round((1.0 - rate) * (1 << 32))) & 0xFFFFFFFF) \
-        if rate > 0 else U32(0xFFFFFFFF)
-    keep = bits < thresh if rate > 0 else jnp.ones_like(bits, bool)
+    keep = bits < U32(keep_threshold(rate)) if rate > 0 \
+        else jnp.ones_like(bits, bool)
     scale = jnp.asarray(1.0 / (1.0 - rate), x.dtype)
     return jnp.where(keep, x * scale, jnp.zeros_like(x))
 
@@ -109,6 +109,11 @@ def uniform_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
     return (bits >> U32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
 
 
+def mc_pi_from_uniforms(ux: jnp.ndarray, uy: jnp.ndarray) -> jnp.ndarray:
+    """(S,) int32 in-circle counts from (T, S) coordinate uniforms."""
+    return jnp.sum((ux * ux + uy * uy) < 1.0, axis=0, dtype=jnp.int32)
+
+
 def mc_pi_partial(x0: U64Pair, hx: U64Pair, hy: U64Pair, num_draws: int,
                   ctr: U64Pair) -> jnp.ndarray:
     """Reference for the fused pi kernel.  Each of the S lanes owns two
@@ -116,7 +121,7 @@ def mc_pi_partial(x0: U64Pair, hx: U64Pair, hy: U64Pair, num_draws: int,
     int32 count of in-circle draws per lane, shape (S,)."""
     ux = uniform_from_bits(thundering_block_ctr(x0, hx, num_draws, ctr))
     uy = uniform_from_bits(thundering_block_ctr(x0, hy, num_draws, ctr))
-    return jnp.sum((ux * ux + uy * uy) < 1.0, axis=0, dtype=jnp.int32)
+    return mc_pi_from_uniforms(ux, uy)
 
 
 def box_muller(u1: jnp.ndarray, u2: jnp.ndarray) -> jnp.ndarray:
@@ -126,6 +131,17 @@ def box_muller(u1: jnp.ndarray, u2: jnp.ndarray) -> jnp.ndarray:
     return r * jnp.cos(2.0 * jnp.float32(jnp.pi) * u2)
 
 
+def mc_option_from_uniforms(u1: jnp.ndarray, u2: jnp.ndarray, s0: float,
+                            k: float, r: float, sigma: float,
+                            t: float) -> jnp.ndarray:
+    """(S,) f32 per-stream discounted-payoff sums from (T, S) uniforms."""
+    z = box_muller(u1, u2)
+    drift = (r - 0.5 * sigma * sigma) * t
+    st = s0 * jnp.exp(drift + sigma * jnp.sqrt(jnp.float32(t)) * z)
+    payoff = jnp.maximum(st - k, 0.0) * jnp.exp(-r * t)
+    return jnp.sum(payoff, axis=0, dtype=jnp.float32)
+
+
 def mc_option_partial(x0: U64Pair, hx: U64Pair, hy: U64Pair, num_draws: int,
                       ctr: U64Pair, s0: float, k: float, r: float,
                       sigma: float, t: float) -> jnp.ndarray:
@@ -133,8 +149,4 @@ def mc_option_partial(x0: U64Pair, hx: U64Pair, hy: U64Pair, num_draws: int,
     discounted call payoffs over num_draws GBM terminal prices. (S,) f32."""
     u1 = uniform_from_bits(thundering_block_ctr(x0, hx, num_draws, ctr))
     u2 = uniform_from_bits(thundering_block_ctr(x0, hy, num_draws, ctr))
-    z = box_muller(u1, u2)
-    drift = (r - 0.5 * sigma * sigma) * t
-    st = s0 * jnp.exp(drift + sigma * jnp.sqrt(jnp.float32(t)) * z)
-    payoff = jnp.maximum(st - k, 0.0) * jnp.exp(-r * t)
-    return jnp.sum(payoff, axis=0, dtype=jnp.float32)
+    return mc_option_from_uniforms(u1, u2, s0, k, r, sigma, t)

@@ -1,5 +1,9 @@
 """Pallas TPU kernel: bulk ThundeRiNG block generation, (T, S) time-major.
 
+This is the executor behind the engine's "pallas" backend
+(``repro.core.engine``); build a ``GenPlan`` and call ``engine.generate``
+rather than invoking ``block_ctr``/``block_faithful`` directly.
+
 The FPGA architecture (Fig. 3) maps onto the TPU grid as:
 
   RSGU (root state generation)  ->  done OUTSIDE the kernel with the

@@ -9,17 +9,28 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_auto(shape, axes):
+    """jax.make_mesh with Auto axis types where the jax version has them.
+
+    ``jax.sharding.AxisType`` only exists on newer jax; on older versions
+    plain ``make_mesh`` already defaults every axis to Auto semantics.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) data x model single pod, or (2, 16, 16) pod x data x model."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Tiny mesh over the locally available devices (tests / examples)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((data, model), ("data", "model"))

@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.launch.analysis import (_DTYPE_BYTES, _shape_bytes,
                                    collective_bytes)
+from repro.launch.mesh import make_mesh_auto
 from repro.models import sharding
 
 
@@ -51,8 +52,7 @@ def test_collective_bytes_parsing():
 
 @pytest.fixture(scope="module")
 def mesh44():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((1, 1), ("data", "model"))
 
 
 def test_param_pspec_tp_priority(mesh44):
@@ -63,16 +63,14 @@ def test_param_pspec_tp_priority(mesh44):
 
 
 def test_param_pspec_vocab_tables_tp_only():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     spec = sharding.param_pspec(("vocab", "embed"), (1024, 64), mesh,
                                 mode="train")
     assert spec == P("model", None)  # no FSDP on table d_model
 
 
 def test_cache_pspec_mqa_falls_back_to_ctx():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     # kv=1 not divisible by model>1 would shard ctx; with model=1 all fine
     spec = sharding._cache_kv_pspec(mesh, (4, 8, 128, 1, 64), kv_idx=3,
                                     ctx_idx=2)
@@ -91,8 +89,8 @@ from repro.launch import analysis as dr
 from repro.models import registry
 from repro.optim import adamw_init
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_auto
+mesh = make_mesh_auto((4, 2), ("data", "model"))
 cfg = get_config("glm4_9b").scaled(
     n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
     q_chunk=16, loss_chunks=2)
@@ -129,9 +127,12 @@ print(json.dumps({"devices": len(jax.devices()),
 def test_end_to_end_dryrun_small_mesh():
     """Real lower+compile on an 8-device forced host platform, with the
     production sharding machinery, in a subprocess."""
+    # JAX_PLATFORMS=cpu: without it, an installed libtpu spends minutes
+    # retrying GCP metadata fetches before falling back to CPU.
     out = subprocess.run([sys.executable, "-c", SUBPROCESS_PROG],
                          capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-2000:]
     rep = json.loads(out.stdout.strip().splitlines()[-1])
     assert rep["devices"] == 8

@@ -134,6 +134,36 @@ def test_bernoulli_rate():
         assert abs(m.mean() - p) < 0.02
 
 
+def test_bernoulli_endpoints_exact():
+    """p=1 must be all True, p=0 all False (float32 threshold used to wrap)."""
+    s = stream.new_stream(27, 0)
+    assert np.asarray(stream.bernoulli(s, 1.0, (4096,))).all()
+    assert not np.asarray(stream.bernoulli(s, 0.0, (4096,))).any()
+    assert np.asarray(stream.bernoulli(s, 1, (16,))).all()      # int p
+    assert not np.asarray(stream.bernoulli(s, 0, (16,))).any()
+
+
+def test_bernoulli_near_one_threshold_exact():
+    """Host threshold is exact 64-bit: round(p * 2**32), not float32."""
+    s = stream.new_stream(28, 0)
+    p = 1.0 - 2.0 ** -20   # float32 p*2**32 would round up to 2**32 and wrap
+    m = np.asarray(stream.bernoulli(s, p, (50_000,)))
+    assert m.mean() > 0.999
+    # exact threshold semantics: mask == (bits < round(p * 2**32))
+    bits = np.asarray(stream.random_bits(s, (50_000,)))
+    assert np.array_equal(m, bits < np.uint32(round(p * 2 ** 32)))
+
+
+def test_bernoulli_traced_p_clamped():
+    s = stream.new_stream(29, 0)
+    f = jax.jit(lambda p: stream.bernoulli(s, p, (1024,)))
+    assert np.asarray(f(jnp.float32(1.0))).all()
+    assert not np.asarray(f(jnp.float32(0.0))).any()
+    assert np.asarray(f(jnp.float32(1.5))).all()    # clamped
+    m = np.asarray(f(jnp.float32(0.5)))
+    assert abs(m.mean() - 0.5) < 0.05
+
+
 def test_categorical_distribution():
     s = stream.new_stream(25, 0)
     logits = jnp.log(jnp.asarray([[0.1, 0.2, 0.7]] * 8192))
