@@ -15,5 +15,5 @@ test-fast:         ## tier-1 minus the slow end-to-end tests
 bench:             ## full benchmark battery (CSV to stdout)
 	$(PY) -m benchmarks.run
 
-bench-smoke:       ## CI-sized throughput smoke (backend bit-parity + timing)
+bench-smoke:       ## CI-sized throughput + sampler smoke (parity, timing, BENCH_throughput.json)
 	$(PY) -m benchmarks.throughput

@@ -1,4 +1,6 @@
-# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV
+# and dumps the machine-readable perf trajectory to BENCH_throughput.json
+# (GSample/s per backend/sampler/dtype/variant).
 from __future__ import annotations
 
 import sys
@@ -9,6 +11,7 @@ def main() -> None:
     from benchmarks import apps, comparison, quality, roofline, throughput
 
     rows = []
+    records = []
 
     def out(line: str):
         rows.append(line)
@@ -17,7 +20,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     suites = [
         ("quality", quality.run),          # Tables 2/3/4
-        ("throughput", throughput.run),    # Figs 5/6
+        ("throughput",                     # Figs 5/6 + fused samplers
+         lambda o: throughput.run(o, records=records)),
         ("comparison", comparison.run),    # Tables 5/6
         ("apps", apps.run),                # Figs 8/9 + Table 7
         ("roofline", roofline.run),        # deliverable (g)
@@ -30,6 +34,10 @@ def main() -> None:
         except Exception as e:  # pragma: no cover
             failures += 1
             out(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+    if records:
+        throughput.write_bench_json(records)
+        print(f"# wrote {throughput.BENCH_JSON} ({len(records)} rows)",
+              flush=True)
     print(f"# {len(rows)} rows in {time.time() - t0:.1f}s", flush=True)
     if failures:
         sys.exit(1)

@@ -1,5 +1,5 @@
 """Paper Figs. 5-6 analogue: bulk MISRN throughput vs number of stream
-instances.
+instances, plus the fused sampler pipeline.
 
 The paper scales SOU instances on a U250 (up to 655 Gnum/s).  Here the
 jnp reference path (the same arithmetic the Pallas kernel runs per tile)
@@ -7,22 +7,44 @@ executes on the host CPU; the figure of merit is throughput scaling with
 S (the state-sharing claim: cost per stream is one add + output stage —
 adding streams must scale ~linearly until bandwidth saturates) plus the
 projected TPU bound (bulk generation writes 4 B/sample; one v5e chip at
-819 GB/s is HBM-bound at ~205 Gsample/s; the fused-consumer kernels in
-benchmarks/apps.py beat that by never writing the samples).
+819 GB/s is HBM-bound at ~205 Gsample/s; bf16 fused sampling halves the
+written bytes -> ~410 GSample/s ceiling; the fused-consumer kernels in
+benchmarks/apps.py beat both by never writing the samples).
+
+``run``/``smoke``/``sampler_smoke`` also append machine-readable row
+dicts (GSample/s per backend/sampler/dtype/variant) that ``run.py`` and
+``__main__`` dump to ``BENCH_throughput.json`` — the perf trajectory
+file.  The sampler section times the fused one-pass path (transform
+applied where the bits are generated) against the historical two-pass
+path (uint32 block materialized by one jitted call, transformed by a
+second), which is the HBM round-trip the sampler stage deletes.
 """
 from __future__ import annotations
 
 import functools
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.core import engine
+from repro.core import engine, sampler as sampler_mod
 from repro.kernels import ops
 
 T_STEPS = 4096
 HBM_BW = 819e9
+
+SAMPLER_CASES = (
+    ("uniform", "float32"),
+    ("uniform", "bfloat16"),
+    ("normal", "float32"),
+    ("normal", "bfloat16"),
+    ("bernoulli(0.5)", "float32"),
+)
+
+BENCH_JSON = pathlib.Path("BENCH_throughput.json")
 
 
 @functools.partial(jax.jit, static_argnames=("s", "t", "mode", "deco",
@@ -33,7 +55,64 @@ def _bulk(s: int, t: int, mode: str, deco: str = "splitmix64",
                                mode=mode, deco=deco, backend=backend)
 
 
-def run(out):
+@functools.partial(jax.jit, static_argnames=("s", "t", "sampler", "dtype",
+                                             "backend"))
+def _fused(s: int, t: int, sampler: str, dtype: str, backend: str):
+    plan = engine.make_plan(seed=7, num_streams=s, num_steps=t,
+                            sampler=sampler, out_dtype=dtype)
+    return engine.generate(plan, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("sampler", "dtype"))
+def _transform(bits, sampler: str, dtype: str):
+    return sampler_mod.apply(bits, sampler_mod.parse(sampler), dtype)
+
+
+def _two_pass(s: int, t: int, sampler: str, dtype: str, backend: str):
+    """bits-then-transform: two jitted calls, the uint32 block crosses the
+    jit boundary (i.e. HBM on a real chip) in between."""
+    bits = _fused(s, t, "bits", "float32", backend)
+    return _transform(bits, sampler, dtype)
+
+
+def _record(records, **kw):
+    if records is not None:
+        records.append(kw)
+
+
+def write_bench_json(records, path: pathlib.Path = BENCH_JSON) -> None:
+    path.write_text(json.dumps({
+        "schema": "bench_throughput/v1",
+        "platform": jax.default_backend(),
+        "rows": records,
+    }, indent=1))
+
+
+def _sampler_section(out, records, s: int, t: int, iters: int) -> None:
+    backend = engine.select_backend(
+        engine.make_plan(seed=7, num_streams=s, num_steps=t))
+    n = s * t
+    for sampler, dtype in SAMPLER_CASES:
+        sec_f = time_fn(_fused, s, t, sampler, dtype, backend, iters=iters)
+        sec_2 = time_fn(_two_pass, s, t, sampler, dtype, backend,
+                        iters=iters)
+        gs_f, gs_2 = n / sec_f / 1e9, n / sec_2 / 1e9
+        speed = sec_2 / sec_f
+        tag = f"{sampler}/{dtype}"
+        out(row(f"throughput/sampler/{tag}/S={s}", sec_f * 1e6,
+                f"{gs_f:.3f} GSample/s {backend} fused "
+                f"x{speed:.2f} vs two-pass"))
+        _record(records, name=f"sampler/{tag}/S={s}", backend=backend,
+                sampler=sampler, dtype=dtype, variant="fused",
+                num_streams=s, num_steps=t, us_per_call=sec_f * 1e6,
+                gsamples_per_s=gs_f, speedup_vs_two_pass=speed)
+        _record(records, name=f"sampler/{tag}/S={s}", backend=backend,
+                sampler=sampler, dtype=dtype, variant="two_pass",
+                num_streams=s, num_steps=t, us_per_call=sec_2 * 1e6,
+                gsamples_per_s=gs_2)
+
+
+def run(out, records=None):
     prev = None
     for s in (128, 512, 2048, 8192):
         sec = time_fn(_bulk, s, T_STEPS, "ctr", iters=3)
@@ -43,11 +122,19 @@ def run(out):
         prev = gs
         out(row(f"throughput/ctr/S={s}", sec * 1e6,
                 f"{gs:.3f} GSample/s host{scale}"))
+        _record(records, name=f"bulk/ctr/S={s}", backend="ref",
+                sampler="bits", dtype="uint32", variant="fused",
+                num_streams=s, num_steps=T_STEPS, us_per_call=sec * 1e6,
+                gsamples_per_s=gs)
     # faithful mode (serial xorshift decorrelator) at one size
     sec = time_fn(_bulk, 512, T_STEPS, "faithful", iters=3)
     gs = 512 * T_STEPS / sec / 1e9
     out(row("throughput/faithful/S=512", sec * 1e6,
             f"{gs:.3f} GSample/s host"))
+    _record(records, name="bulk/faithful/S=512", backend="ref",
+            sampler="bits", dtype="uint32", variant="fused",
+            num_streams=512, num_steps=T_STEPS, us_per_call=sec * 1e6,
+            gsamples_per_s=gs)
     # fmix32 decorrelator (beyond-paper; 96 -> 30 uint ops/sample)
     sec64 = time_fn(_bulk, 2048, T_STEPS, "ctr", iters=3)
     sec32 = time_fn(_bulk, 2048, T_STEPS, "ctr", "fmix32", iters=3)
@@ -62,15 +149,16 @@ def run(out):
     out(row("throughput/engine_xla/S=2048", sec_xla * 1e6,
             f"{2048 * T_STEPS / sec_xla / 1e9:.3f} GSample/s host "
             f"x{sec_ref / sec_xla:.2f} vs ref backend"))
+    # fused sampler pipeline vs the bits-then-transform two-pass path
+    _sampler_section(out, records, s=2048, t=T_STEPS, iters=3)
     out(row("throughput/tpu_projection", 0.0,
-            f"bulk HBM-bound {HBM_BW / 4 / 1e9:.0f} GSample/s/chip;"
+            f"bulk HBM-bound {HBM_BW / 4 / 1e9:.0f} GSample/s/chip "
+            f"(f32/u32), {HBM_BW / 2 / 1e9:.0f} bf16 fused;"
             f" paper FPGA 655 Gnum/s"))
 
 
-def smoke(out=print) -> None:
+def smoke(out=print, records=None) -> None:
     """CI-sized sanity run: one small block per backend, bit-equal check."""
-    import numpy as np
-
     plan = engine.make_plan(seed=7, num_streams=256, num_steps=64)
     base = np.asarray(engine.generate(plan, backend="ref"))
     for backend in ("xla", "pallas"):
@@ -80,11 +168,44 @@ def smoke(out=print) -> None:
             plan, backend=backend)))
         assert same, f"{backend} disagrees with ref"
         out(row(f"smoke/{backend}", sec * 1e6, "bit-equal to ref"))
+        _record(records, name=f"smoke/{backend}", backend=backend,
+                sampler="bits", dtype="uint32", variant="fused",
+                num_streams=256, num_steps=64, us_per_call=sec * 1e6,
+                gsamples_per_s=256 * 64 / sec / 1e9)
     sec = time_fn(functools.partial(engine.generate_sharded, plan), iters=1)
     assert np.array_equal(base, np.asarray(engine.generate_sharded(plan)))
     out(row("smoke/sharded", sec * 1e6,
             f"bit-equal over {len(jax.devices())} device(s)"))
 
 
+def sampler_smoke(out=print, records=None) -> None:
+    """CI-sized fused-sampler run: parity per backend + fused/two-pass
+    timing at one small size."""
+    for sampler, dtype in SAMPLER_CASES:
+        plan = engine.make_plan(seed=11, num_streams=256, num_steps=64,
+                                sampler=sampler, out_dtype=dtype)
+        base = np.asarray(engine.generate(plan, backend="ref"))
+
+        def raw(a):
+            return a.view(np.uint16) if a.dtype == jnp.bfloat16 else a
+
+        for backend in ("xla", "pallas"):
+            got = np.asarray(engine.generate(plan, backend=backend))
+            if sampler == "normal":  # libm ULP slack, see test_sampler
+                assert np.allclose(got.astype(np.float32),
+                                   base.astype(np.float32), rtol=1e-5), \
+                    (sampler, backend)
+            else:
+                assert np.array_equal(raw(got), raw(base)), \
+                    (sampler, backend)
+        out(row(f"smoke/sampler/{sampler}/{dtype}", 0.0,
+                "matches ref on xla+pallas"))
+    _sampler_section(out, records, s=2048, t=2048, iters=2)
+
+
 if __name__ == "__main__":
-    smoke()
+    records = []
+    smoke(records=records)
+    sampler_smoke(records=records)
+    write_bench_json(records)
+    print(f"# wrote {BENCH_JSON} ({len(records)} rows)")

@@ -5,7 +5,8 @@ root-state generator (RSGU) feeds any number of cheap per-stream output
 units (SOU + decorrelator).  This module makes that split explicit in
 software.  A ``GenPlan`` describes WHAT to generate —
 
-  (x0, h-table, counter window, (T, S) shape, decorrelator mode)
+  (x0, h-table, counter window, (T, S) shape, decorrelator mode,
+   sampler output stage)
 
 — and a pluggable backend decides HOW:
 
@@ -19,6 +20,13 @@ software.  A ``GenPlan`` describes WHAT to generate —
 All backends are bit-exact for both decorrelator modes, so the choice is
 purely a performance decision; ``select_backend`` picks one from the plan
 shape and platform, and every entry point takes a per-call override.
+
+The plan's *sampler* field (``repro.core.sampler``) fuses distribution
+shaping into generation — uniform / Box-Muller normal / exact-threshold
+bernoulli, float32 or bfloat16 — applied in-VMEM by the Pallas kernels
+and as fused elementwise arithmetic by ref/xla, so raw uint32 blocks
+never round-trip through HBM on the way to a float consumer.
+``sample(plan, sampler=...)`` is the per-call override.
 
 ``generate_sharded`` is the multi-device analogue of the paper's instance
 scaling: the (T, S) block is split over a mesh by the stream axis with
@@ -50,7 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lcg, splitmix, u64, xorshift
+from repro.core import lcg, sampler as sampler_mod, splitmix, u64, xorshift
 from repro.core.u64 import U32, U64Pair
 
 DEFAULT_BLOCK_T = 256
@@ -115,6 +123,11 @@ class GenPlan:
     mode      "ctr" (counter decorrelator, pure map) or "faithful"
               (paper's serial xorshift128 decorrelator).
     deco      ctr-mode hash: "splitmix64" (default) or "fmix32".
+    sampler   output stage: "bits" (default), "uniform", "normal"
+              (Box-Muller over adjacent row pairs; T must be even) or
+              "bernoulli(p)".  See ``repro.core.sampler``.
+    out_dtype "float32" or "bfloat16" for the float samplers (bits is
+              always uint32, bernoulli always bool).
     """
     x0: U64Pair
     h: U64Pair
@@ -123,6 +136,8 @@ class GenPlan:
     offset: Optional[int] = 0
     mode: str = "ctr"
     deco: str = "splitmix64"
+    sampler: str = "bits"
+    out_dtype: str = "float32"
 
     @property
     def num_streams(self) -> int:
@@ -135,17 +150,20 @@ class GenPlan:
 
 def make_plan(*, seed: int, num_streams: int, num_steps: int, offset: int = 0,
               purpose: int = 0, mode: str = "ctr",
-              deco: str = "splitmix64") -> GenPlan:
+              deco: str = "splitmix64", sampler: str = "bits",
+              out_dtype: str = "float32") -> GenPlan:
     """Plan for a (T, S) block of the family derived from ``seed``."""
     x0, h_fam = family_from_seed(seed, purpose)
     ch, cl = u64.const64(offset)
     return GenPlan(x0=x0, h=leaf_table(h_fam, num_streams),
                    num_steps=num_steps, ctr=(u64.to_u32(ch), u64.to_u32(cl)),
-                   offset=offset, mode=mode, deco=deco)
+                   offset=offset, mode=mode, deco=deco, sampler=sampler,
+                   out_dtype=out_dtype)
 
 
 def plan_for_stream(stream, num_steps: int, mode: str = "ctr",
-                    deco: str = "splitmix64") -> GenPlan:
+                    deco: str = "splitmix64", sampler: str = "bits",
+                    out_dtype: str = "float32") -> GenPlan:
     """Plan for ``num_steps`` elements of ONE ThunderStream (S = 1).
 
     The stream's counter is traced state, so ``offset`` is None; backends
@@ -156,7 +174,8 @@ def plan_for_stream(stream, num_steps: int, mode: str = "ctr",
                       jnp.reshape(stream.h_lo, (1,))),
                    num_steps=num_steps,
                    ctr=(stream.ctr_hi, stream.ctr_lo),
-                   offset=None, mode=mode, deco=deco)
+                   offset=None, mode=mode, deco=deco, sampler=sampler,
+                   out_dtype=out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -185,10 +204,7 @@ def _faithful_start_states(plan: GenPlan) -> jnp.ndarray:
     tbl = xorshift.lane_table(S)
     if plan.offset is not None:
         if plan.offset:
-            tbl = np.stack([
-                np.asarray(xorshift.jump(tuple(int(w) for w in tbl[s]),
-                                         plan.offset), np.uint32)
-                for s in range(S)])
+            tbl = xorshift.jump_batch(tbl, plan.offset)
         return jnp.asarray(tbl)
     return xorshift.jump_traced(jnp.asarray(tbl), plan.ctr[0], plan.ctr[1])
 
@@ -211,15 +227,17 @@ def _faithful_tile_states(plan: GenPlan, block_t: int, n_tiles: int,
         states = jax.vmap(tile_from)(jnp.arange(n_tiles, dtype=U32))
         return jnp.transpose(states, (0, 2, 1))  # (n_tiles, 4, S)
     if plan.offset is not None:
+        # Vectorized GF(2) jumps over the WHOLE lane table: n_tiles batched
+        # matvecs instead of an O(S * n_tiles) python-int jump loop
+        # (minutes of host work at S = 2**14).
         tbl = xorshift.lane_table(S)
+        if plan.offset:
+            tbl = xorshift.jump_batch(tbl, plan.offset)
         states = np.empty((n_tiles, 4, S), np.uint32)
-        for s in range(S):
-            st = tuple(int(w) for w in tbl[s])
-            if plan.offset:
-                st = xorshift.jump(st, plan.offset)
-            for i in range(n_tiles):
-                states[i, :, s] = st
-                st = xorshift.jump(st, block_t)
+        for i in range(n_tiles):
+            states[i] = tbl.T
+            if i + 1 < n_tiles:
+                tbl = xorshift.jump_batch(tbl, block_t)
         return jnp.asarray(states)
     tbl = jnp.asarray(xorshift.lane_table(S))  # (S, 4)
 
@@ -275,14 +293,17 @@ def _ref_backend(plan: GenPlan, *, block_t: int, block_s: int,
                  xs0: Optional[jnp.ndarray]) -> jnp.ndarray:
     from repro.kernels import ref
     if plan.mode == "ctr":
-        return ref.thundering_block_ctr(plan.x0, plan.h, plan.num_steps,
+        bits = ref.thundering_block_ctr(plan.x0, plan.h, plan.num_steps,
                                         plan.ctr, deco=plan.deco)
-    if plan.mode == "faithful":
+    elif plan.mode == "faithful":
         if xs0 is None:
             xs0 = _faithful_start_states(plan)
-        return ref.thundering_block_faithful(plan.x0, plan.h, plan.num_steps,
+        bits = ref.thundering_block_faithful(plan.x0, plan.h, plan.num_steps,
                                              xs0, plan.ctr)
-    raise ValueError(f"unknown mode {plan.mode!r}")
+    else:
+        raise ValueError(f"unknown mode {plan.mode!r}")
+    return sampler_mod.apply(bits, sampler_mod.parse(plan.sampler),
+                             plan.out_dtype)
 
 
 @register_backend("xla")
@@ -297,8 +318,8 @@ def _xla_backend(plan: GenPlan, *, block_t: int, block_s: int,
              jnp.broadcast_to(plan.h[1][None, :], (T, S))),
             (jnp.broadcast_to(ctr_rows[0][:, None], (T, S)),
              jnp.broadcast_to(ctr_rows[1][:, None], (T, S))))
-        return permuted ^ dec
-    if plan.mode == "faithful":
+        bits = permuted ^ dec
+    elif plan.mode == "faithful":
         if xs0 is None:
             xs0 = _faithful_start_states(plan)
 
@@ -307,9 +328,13 @@ def _xla_backend(plan: GenPlan, *, block_t: int, block_s: int,
             x, y, z, w = xorshift.step_xyzw(x, y, z, w)
             return jnp.stack([x, y, z, w], -1), perm_row ^ w
 
-        _, out = jax.lax.scan(body, xs0, permuted)
-        return out
-    raise ValueError(f"unknown mode {plan.mode!r}")
+        _, bits = jax.lax.scan(body, xs0, permuted)
+    else:
+        raise ValueError(f"unknown mode {plan.mode!r}")
+    # XLA fuses the sampler stage into the generation elementwise graph;
+    # the barrier only matters for normal's pairing rolls (see sampler).
+    return sampler_mod.apply(bits, sampler_mod.parse(plan.sampler),
+                             plan.out_dtype, barrier=True)
 
 
 def _pad_to(x: int, mult: int) -> int:
@@ -321,18 +346,22 @@ def _pallas_backend(plan: GenPlan, *, block_t: int, block_s: int,
                     xs0: Optional[jnp.ndarray]) -> jnp.ndarray:
     from repro.kernels import thundering_block as _tb
     T = plan.num_steps
+    spec = sampler_mod.parse(plan.sampler)
     roots, ctr_rows = root_and_ctr_rows(plan.x0, plan.ctr, T)
     if plan.mode == "ctr":
         return _tb.block_ctr(roots, ctr_rows, plan.h, block_t=block_t,
                              block_s=block_s, interpret=use_interpret(),
-                             deco=plan.deco)
+                             deco=plan.deco, sampler=spec,
+                             out_dtype=plan.out_dtype)
     if plan.mode == "faithful":
-        bt = min(block_t, _pad_to(T, 8))
+        bt = _tb.tile_t(block_t, T,
+                        sampler_mod.result_dtype(spec, plan.out_dtype))
         n_tiles = -(-T // bt)
         states = _faithful_tile_states(plan, bt, n_tiles, xs0)
         return _tb.block_faithful(roots, plan.h, states, block_t=bt,
                                   block_s=block_s,
-                                  interpret=use_interpret())
+                                  interpret=use_interpret(),
+                                  sampler=spec, out_dtype=plan.out_dtype)
     raise ValueError(f"unknown mode {plan.mode!r}")
 
 
@@ -340,14 +369,14 @@ def _pallas_backend(plan: GenPlan, *, block_t: int, block_s: int,
 # Dispatch
 # ---------------------------------------------------------------------------
 
-def select_backend(plan: GenPlan, block_t: int = DEFAULT_BLOCK_T,
-                   block_s: int = DEFAULT_BLOCK_S) -> str:
-    """Heuristic backend choice.
+def select_backend(plan: GenPlan) -> str:
+    """Pick a backend from the plan shape and the runtime platform.
 
-    On TPU, tile-friendly shapes (at least one VPU tile of work) go to the
-    Pallas kernels; everything else — and everything on CPU, where the
-    kernels only run under the interpreter — compiles through plain XLA.
-    ``"ref"`` is never auto-selected; it is the oracle, asked for by name.
+    On TPU, shapes with at least one VPU tile of work (S >= 128 lanes,
+    T >= 8 sublanes) go to the Pallas kernels; everything else — and
+    everything off-TPU, where the kernels only run under the interpreter —
+    compiles through plain XLA.  ``"ref"`` is never auto-selected; it is
+    the oracle, asked for by name.
     """
     T, S = plan.shape
     if jax.default_backend() == "tpu" and S >= 128 and T >= 8:
@@ -355,17 +384,29 @@ def select_backend(plan: GenPlan, block_t: int = DEFAULT_BLOCK_T,
     return "xla"
 
 
+def _validate_plan(plan: GenPlan) -> None:
+    spec = sampler_mod.parse(plan.sampler)          # raises on bad spec
+    sampler_mod.result_dtype(spec, plan.out_dtype)  # raises on bad dtype
+    if spec[0] == "normal" and plan.num_steps % 2:
+        raise ValueError(
+            f"sampler='normal' pairs adjacent rows (Box-Muller) and needs "
+            f"an even T, got T={plan.num_steps}")
+
+
 def generate(plan: GenPlan, *, backend: Optional[str] = None,
              block_t: int = DEFAULT_BLOCK_T, block_s: int = DEFAULT_BLOCK_S,
              xs0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """(T, S) uint32 MISRN block for ``plan``, time-major.
+    """(T, S) block for ``plan``, time-major; dtype set by the sampler
+    stage (uint32 bits by default, float32/bfloat16 for the float
+    samplers, bool for bernoulli).
 
     ``backend`` overrides ``select_backend``; ``xs0`` optionally supplies
     pre-advanced (S, 4) xorshift start states for faithful mode (used by
     ``generate_sharded``, where substream identity follows the GLOBAL
     stream index, not the local shard).
     """
-    name = backend or select_backend(plan, block_t, block_s)
+    _validate_plan(plan)
+    name = backend or select_backend(plan)
     try:
         fn = _BACKENDS[name]
     except KeyError:
@@ -374,10 +415,31 @@ def generate(plan: GenPlan, *, backend: Optional[str] = None,
     return fn(plan, block_t=block_t, block_s=block_s, xs0=xs0)
 
 
+def sample(plan: GenPlan, *, sampler: Optional[str] = None,
+           out_dtype: Optional[str] = None, backend: Optional[str] = None,
+           block_t: int = DEFAULT_BLOCK_T, block_s: int = DEFAULT_BLOCK_S,
+           xs0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """``generate`` with the sampler stage overridden per call.
+
+    ``sample(plan, sampler="uniform")`` draws U[0,1) floats from the plan's
+    (T, S) window without materializing the uint32 bits on any backend
+    that fuses (xla fuses elementwise; pallas applies the transform
+    in-VMEM).  ``sampler=None`` keeps the plan's own stage.
+    """
+    if sampler is not None or out_dtype is not None:
+        plan = dataclasses.replace(
+            plan,
+            sampler=plan.sampler if sampler is None else sampler,
+            out_dtype=plan.out_dtype if out_dtype is None else out_dtype)
+    return generate(plan, backend=backend, block_t=block_t, block_s=block_s,
+                    xs0=xs0)
+
+
 def generate_flat(plan: GenPlan, *, backend: Optional[str] = None,
                   block_t: int = DEFAULT_BLOCK_T,
                   block_s: int = DEFAULT_BLOCK_S) -> jnp.ndarray:
-    """(T,) uint32 vector for a single-stream plan (S must be 1)."""
+    """(T,) vector for a single-stream plan (S must be 1); dtype follows
+    the plan's sampler stage."""
     if plan.num_streams != 1:
         raise ValueError(f"generate_flat needs S=1, got S={plan.num_streams}")
     return generate(plan, backend=backend, block_t=block_t,

@@ -1,0 +1,193 @@
+"""Sampler output stages: distribution shaping fused into generation.
+
+ThundeRiNG's applications never spill raw random words off-chip — bits
+flow through an on-chip FIFO straight into the consumer (Table 7).  The
+software analogue: a ``GenPlan`` carries a *sampler* output stage and the
+backends apply it where the bits live —
+
+  * ``"ref"`` / ``"xla"``  as fused elementwise jnp on the bit block,
+  * ``"pallas"``           in-VMEM inside the generation kernel, so the
+                           (T, S) uint32 block never reaches HBM and a
+                           bfloat16 output halves bytes/sample.
+
+This module is the single home of the transforms, shared by all three
+backends (and the fused Monte-Carlo kernels), which is what makes the
+fused outputs bit/value-exact across backends: every path applies the
+same jnp ops to the same bits.
+
+Samplers (``GenPlan.sampler`` spec strings):
+
+  "bits"          raw uint32 (default; ``out_dtype`` ignored)
+  "uniform"       U[0, 1) from the top 24 bits, float32 or bfloat16
+  "normal"        standard normal via Box-Muller over *adjacent row
+                  pairs*: rows (2k, 2k+1) of the block supply (u1, u2)
+                  and receive (r cos th, r sin th).  Requires even T.
+                  u1 is clamped to the smallest positive normal float32,
+                  so log(0) can never occur (open-interval guarantee).
+  "bernoulli(p)"  bool mask, P(True) = p via the exact host-int
+                  threshold round(p * 2**32) (the PR-1 precision rule:
+                  p <= 0 / p >= 1 short-circuit to constant masks, the
+                  threshold never wraps uint32).
+
+Everything here is pure jnp over uint32/float32 and lowers both in
+regular jitted JAX and inside Pallas kernel bodies; kernel callers pass
+``roll=pltpu.roll`` so the pairing shuffle stays a Mosaic-native
+sublane rotate.
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lcg, splitmix, u64
+from repro.core.u64 import U32, U64Pair
+
+# Smallest positive normal float32: sqrt(-2 ln TINY) ~ 13.2, finite.
+TINY_F32 = np.float32(1.1754944e-38)
+TWO_PI_F32 = np.float32(2.0 * np.pi)
+
+SamplerSpec = Tuple[str, Optional[float]]
+
+_BERNOULLI_RE = re.compile(r"^bernoulli\(([^)]+)\)$")
+FLOAT_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def parse(spec: str) -> SamplerSpec:
+    """Sampler spec string -> ("bits"|"uniform"|"normal"|"bernoulli", p)."""
+    if spec in ("bits", "uniform", "normal"):
+        return (spec, None)
+    m = _BERNOULLI_RE.match(spec)
+    if m:
+        return ("bernoulli", float(m.group(1)))
+    raise ValueError(
+        f"unknown sampler {spec!r}; expected 'bits', 'uniform', 'normal' "
+        f"or 'bernoulli(p)'")
+
+
+def result_dtype(spec: SamplerSpec, out_dtype: str = "float32"):
+    """The jnp dtype a sampler stage emits."""
+    kind, _ = spec
+    if kind == "bits":
+        return jnp.uint32
+    if kind == "bernoulli":
+        return jnp.bool_
+    try:
+        return FLOAT_DTYPES[out_dtype]
+    except KeyError:
+        raise ValueError(f"unknown out_dtype {out_dtype!r}; "
+                         f"have {sorted(FLOAT_DTYPES)}")
+
+
+def bernoulli_threshold(p: float) -> int:
+    """Exact uint32 threshold for P(bits < thresh) = p.
+
+    Host-int arithmetic (float32 would wrap or lose low bits near p=1),
+    clamped to 2**32 - 1; callers must short-circuit p <= 0 / p >= 1.
+    """
+    return min(int(round(float(p) * (1 << 32))), (1 << 32) - 1)
+
+
+# ---------------------------------------------------------------------------
+# Generation stage (shared by the ctr-mode kernels)
+# ---------------------------------------------------------------------------
+
+def ctr_bits(root: U64Pair, ctr: U64Pair, h: U64Pair,
+             deco: str = "splitmix64") -> jnp.ndarray:
+    """ThundeRiNG ctr-mode bits: XSH_RR(root + h) ^ deco(h, ctr).
+
+    Operands broadcast, so (BT, 1) roots/counters against (1, BS) leaf
+    offsets yield a (BT, BS) tile — the kernel-body form — while (T,)
+    against scalars yields the flat form.
+    """
+    leaf = u64.add64(root, h)
+    perm = lcg.xsh_rr(leaf)
+    deco_fn = splitmix.ctr_decorrelator if deco == "splitmix64" \
+        else splitmix.ctr_decorrelator32
+    return perm ^ deco_fn(h, ctr)
+
+
+# ---------------------------------------------------------------------------
+# Output-stage transforms
+# ---------------------------------------------------------------------------
+
+def uniform_from_bits(bits: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """U[0, 1) from the top 24 bits (matches stream.uniform exactly).
+
+    Always computed at float32 resolution; bfloat16 output is the f32
+    value rounded once at the end (the bandwidth-halving cast).
+    """
+    u = (bits >> U32(8)).astype(jnp.float32) * np.float32(2.0 ** -24)
+    return u if dtype == jnp.float32 else u.astype(dtype)
+
+
+def box_muller(u1: jnp.ndarray, u2: jnp.ndarray) -> jnp.ndarray:
+    """Standard normal from two U[0,1) arrays (cos branch), log(0)-safe."""
+    r = jnp.sqrt(np.float32(-2.0) * jnp.log(jnp.maximum(u1, TINY_F32)))
+    return r * jnp.cos(TWO_PI_F32 * u2)
+
+
+def normal_pairs(u: jnp.ndarray, roll: Callable = jnp.roll,
+                 barrier: bool = False) -> jnp.ndarray:
+    """(T, S) standard normals from (T, S) uniforms, T even.
+
+    Box-Muller over adjacent row pairs: rows (2k, 2k+1) supply (u1, u2)
+    and receive (r cos th, r sin th) — both branches, so the output shape
+    equals the input shape and no bits are wasted.  Pairing is by row
+    parity, so any even-aligned tiling (Pallas bt is a multiple of 8)
+    computes identical values; kernel bodies pass ``roll=pltpu.roll``.
+
+    ``barrier=True`` pins ``u`` behind an optimization barrier (a value
+    identity): without it XLA:CPU rematerializes the whole generation
+    pipeline into each roll consumer's fusion, tripling the work.  The
+    Pallas kernel does not need it (the tile is computed once in VMEM).
+    """
+    if barrier:
+        u = jax.lax.optimization_barrier(u)
+    even = (jax.lax.broadcasted_iota(jnp.uint32, u.shape, 0)
+            & U32(1)) == U32(0)
+    # up-shift expressed as a positive roll (pltpu.roll rejects negatives)
+    mate = jnp.where(even, roll(u, u.shape[0] - 1, 0), roll(u, 1, 0))
+    u1 = jnp.where(even, u, mate)
+    u2 = jnp.where(even, mate, u)
+    r = jnp.sqrt(np.float32(-2.0) * jnp.log(jnp.maximum(u1, TINY_F32)))
+    theta = TWO_PI_F32 * u2
+    return r * jnp.where(even, jnp.cos(theta), jnp.sin(theta))
+
+
+def apply(bits: jnp.ndarray, spec: SamplerSpec, out_dtype: str = "float32",
+          roll: Callable = jnp.roll, barrier: bool = False) -> jnp.ndarray:
+    """Apply a parsed sampler stage to a uint32 bit block.
+
+    The ONE transform every backend runs — outside the kernel for
+    ref/xla, inside VMEM for pallas (with ``roll=pltpu.roll``).
+    """
+    kind, p = spec
+    if kind == "bits":
+        return bits
+    if kind == "uniform":
+        return uniform_from_bits(bits, result_dtype(spec, out_dtype))
+    if kind == "normal":
+        z = normal_pairs(uniform_from_bits(bits), roll=roll,
+                         barrier=barrier)
+        dtype = result_dtype(spec, out_dtype)
+        return z if dtype == jnp.float32 else z.astype(dtype)
+    if kind == "bernoulli":
+        if p <= 0.0:
+            return jnp.zeros(bits.shape, jnp.bool_)
+        if p >= 1.0:
+            return jnp.ones(bits.shape, jnp.bool_)
+        return bits < U32(bernoulli_threshold(p))
+    raise ValueError(f"unknown sampler kind {kind!r}")
+
+
+def sublane_multiple(dtype) -> int:
+    """Minimum sublane tile multiple for a Pallas out dtype (TPU tiling)."""
+    if dtype == jnp.bfloat16:
+        return 16
+    if dtype in (jnp.bool_, jnp.int8, jnp.uint8):
+        return 32
+    return 8

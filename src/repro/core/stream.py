@@ -101,11 +101,39 @@ def random_bits(stream: ThunderStream, shape: Tuple[int, ...]) -> jnp.ndarray:
     return engine.generate_flat(plan).reshape(shape)
 
 
+def uniforms(stream: ThunderStream, shape=(), dtype=jnp.float32
+             ) -> jnp.ndarray:
+    """U[0, 1) samples via the engine's fused uniform sampler stage.
+
+    The bulk convenience API: one engine plan with ``sampler="uniform"``,
+    so on TPU the uint32 bits never reach HBM and ``dtype=jnp.bfloat16``
+    halves the written bytes.  Element i is the transform of stream
+    element ctr + i (same bits as ``random_bits``).
+    """
+    n = int(math.prod(shape)) if shape else 1
+    plan = engine.plan_for_stream(stream, n, sampler="uniform",
+                                  out_dtype=jnp.dtype(dtype).name)
+    return engine.generate_flat(plan).reshape(shape)
+
+
+def normals(stream: ThunderStream, shape=(), dtype=jnp.float32
+            ) -> jnp.ndarray:
+    """Standard normals via the engine's fused Box-Muller sampler stage.
+
+    Pairs counter-adjacent elements (2k, 2k+1); for odd sample counts one
+    extra element is generated and dropped (the pair tail).
+    """
+    n = int(math.prod(shape)) if shape else 1
+    n_even = n + (n & 1)
+    plan = engine.plan_for_stream(stream, n_even, sampler="normal",
+                                  out_dtype=jnp.dtype(dtype).name)
+    return engine.generate_flat(plan)[:n].reshape(shape)
+
+
 def uniform(stream: ThunderStream, shape=(), dtype=jnp.float32,
             minval=0.0, maxval=1.0) -> jnp.ndarray:
     """U[minval, maxval) floats built from the top 24 bits."""
-    bits = random_bits(stream, shape)
-    u = (bits >> U32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
+    u = uniforms(stream, shape, jnp.float32)
     return (minval + u * (maxval - minval)).astype(dtype)
 
 
@@ -128,13 +156,10 @@ def bernoulli(stream: ThunderStream, p, shape=()) -> jnp.ndarray:
     precision, with the endpoints still exact.
     """
     if isinstance(p, (bool, int, float)):
-        pf = float(p)
-        if pf <= 0.0:
-            return jnp.zeros(shape, bool)
-        if pf >= 1.0:
-            return jnp.ones(shape, bool)
-        thresh = min(int(round(pf * (1 << 32))), (1 << 32) - 1)
-        return random_bits(stream, shape) < U32(thresh)
+        n = int(math.prod(shape)) if shape else 1
+        plan = engine.plan_for_stream(stream, n,
+                                      sampler=f"bernoulli({float(p)!r})")
+        return engine.generate_flat(plan).reshape(shape)
     bits = random_bits(stream, shape)
     p32 = jnp.clip(jnp.asarray(p, jnp.float32), 0.0, 1.0)
     # 4294967040 = 2**32 - 256, the largest float32 below 2**32 (a float32

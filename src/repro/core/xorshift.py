@@ -168,6 +168,47 @@ def _packed_pow2_matrices(max_log2: int = 64) -> np.ndarray:
     return out
 
 
+_POPCOUNT8 = np.array([bin(i).count("1") for i in range(256)], np.uint8)
+
+
+def _popcount_u32(a: np.ndarray) -> np.ndarray:
+    if hasattr(np, "bitwise_count"):  # numpy >= 2.0
+        return np.bitwise_count(a)
+    return _POPCOUNT8[a.view(np.uint8)].reshape(a.shape + (4,)).sum(-1)
+
+
+def _matvec_batch(mat: np.ndarray, states: np.ndarray) -> np.ndarray:
+    """One packed GF(2) matvec over a whole state table.
+
+    mat: (128, 4) uint32 packed rows; states: (S, 4) uint32.  Output bit r
+    of each state = parity(popcount(mat[r] & state)).
+    """
+    acc = mat[None, :, :] & states[:, None, :]            # (S, 128, 4)
+    parity = (_popcount_u32(acc).astype(np.uint32).sum(-1) & 1)  # (S, 128)
+    bits = parity.reshape(states.shape[0], 4, 32).astype(np.uint32)
+    return (bits << np.arange(32, dtype=np.uint32)).sum(-1, dtype=np.uint32)
+
+
+def jump_batch(states: np.ndarray, n: int) -> np.ndarray:
+    """Advance a whole (S, 4) uint32 state table by n steps at once.
+
+    Vectorized numpy version of ``jump``: one packed-matrix matvec per set
+    bit of ``n``, over all S lanes simultaneously — O(popcount(n)) numpy
+    ops instead of O(S) python-int matvec loops.  Bit-identical to
+    per-state ``jump`` (same GF(2) matrices).
+    """
+    states = np.asarray(states, np.uint32)
+    mats = _packed_pow2_matrices(64)
+    n = int(n)
+    k = 0
+    while n:
+        if n & 1:
+            states = _matvec_batch(mats[k], states)
+        n >>= 1
+        k += 1
+    return states
+
+
 def jump_traced(state: jnp.ndarray, n_hi: jnp.ndarray, n_lo: jnp.ndarray
                 ) -> jnp.ndarray:
     """Traced jump-ahead by a dynamic 64-bit count (n_hi, n_lo).

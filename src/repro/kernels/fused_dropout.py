@@ -20,18 +20,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import lcg, splitmix, u64
+from repro.core import lcg, sampler, splitmix, u64
 from repro.core.u64 import U32
 
 
 def keep_threshold(rate: float) -> int:
     """uint32 keep threshold for a drop rate: round((1-rate) * 2**32).
 
-    Computed with exact host-int arithmetic and clamped to 2**32 - 1 so a
-    tiny positive rate cannot round up to 2**32 and wrap to an all-drop
-    threshold (the same precision trap as stream.bernoulli near p=1).
+    The engine's bernoulli sampler threshold at p = 1 - rate: exact
+    host-int arithmetic, clamped to 2**32 - 1 so a tiny positive rate
+    cannot round up to 2**32 and wrap to an all-drop threshold.
     """
-    return min(int(round((1.0 - rate) * (1 << 32))), (1 << 32) - 1)
+    return sampler.bernoulli_threshold(1.0 - rate)
 
 
 def _kernel(x_ref, rb_hi_ref, rb_lo_ref, cb_hi_ref, cb_lo_ref,

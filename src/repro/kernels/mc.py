@@ -8,8 +8,16 @@ reduction leaves the kernel.  Arithmetic intensity goes from ~1 op/byte
 the TPU counterpart of the paper's on-chip FIFO into the application
 kernels (their Table 7 apps never spill random numbers to DDR either).
 
+The generation and distribution stages are the shared sampler stages
+(``repro.core.sampler``): these kernels are compositions of
+``sampler.ctr_bits`` -> ``sampler.uniform_from_bits`` -> integrand, the
+same stages the engine's fused sampler pipeline runs, so they stay
+bit-identical with the engine-backed reference paths by construction.
+
 Grid (T_tiles, S_tiles); each instance draws BT samples for BS lanes and
 emits one (1, BS) partial (count or payoff-sum); the host sums partials.
+T need not be a tile multiple: padded rows are masked out of the partial
+reductions inside the kernel.
 """
 from __future__ import annotations
 
@@ -20,51 +28,55 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import lcg, splitmix, u64
+from repro.core import sampler as sampler_mod
 from repro.core.u64 import U32
 
 DEFAULT_BLOCK_T = 256
 DEFAULT_BLOCK_S = 512
 
 
-def _bits(root, ctr_rows, h):
-    """(BT, BS) ThundeRiNG ctr-mode bits from (BT,1) roots + (1,BS) h."""
-    leaf = u64.add64(root, h)
-    perm = lcg.xsh_rr(leaf)
-    deco = splitmix.ctr_decorrelator(h, ctr_rows)
-    return perm ^ deco
+def _uniform_draw(root, ctr_rows, h):
+    """One fused sampler stage: ctr-mode bits -> U[0,1) f32, in VREGs."""
+    return sampler_mod.uniform_from_bits(
+        sampler_mod.ctr_bits(root, ctr_rows, h))
 
 
-def _uniform(bits):
-    return (bits >> U32(8)).astype(jnp.float32) * np.float32(2.0 ** -24)
+def _row_mask(tile_rows: int, n_cols: int, block_t: int, num_steps: int):
+    """(BT, BS) bool: True for rows whose global time index is < T."""
+    t0 = pl.program_id(0) * block_t
+    row = t0 + jax.lax.broadcasted_iota(jnp.int32, (tile_rows, n_cols), 0)
+    return row < num_steps
 
 
 def _pi_kernel(root_hi_ref, root_lo_ref, ctr_hi_ref, ctr_lo_ref,
-               hx_hi_ref, hx_lo_ref, hy_hi_ref, hy_lo_ref, o_ref):
+               hx_hi_ref, hx_lo_ref, hy_hi_ref, hy_lo_ref, o_ref,
+               *, block_t: int, num_steps: int):
     root = (root_hi_ref[...], root_lo_ref[...])
     ctr = (ctr_hi_ref[...], ctr_lo_ref[...])
-    ux = _uniform(_bits(root, ctr, (hx_hi_ref[...], hx_lo_ref[...])))
-    uy = _uniform(_bits(root, ctr, (hy_hi_ref[...], hy_lo_ref[...])))
+    ux = _uniform_draw(root, ctr, (hx_hi_ref[...], hx_lo_ref[...]))
+    uy = _uniform_draw(root, ctr, (hy_hi_ref[...], hy_lo_ref[...]))
     inside = (ux * ux + uy * uy) < 1.0
-    o_ref[...] = jnp.sum(inside.astype(jnp.int32), axis=0, keepdims=True)
+    valid = _row_mask(ux.shape[0], ux.shape[1], block_t, num_steps)
+    o_ref[...] = jnp.sum((inside & valid).astype(jnp.int32), axis=0,
+                         keepdims=True)
 
 
 def _option_kernel(root_hi_ref, root_lo_ref, ctr_hi_ref, ctr_lo_ref,
                    hx_hi_ref, hx_lo_ref, hy_hi_ref, hy_lo_ref, o_ref,
-                   *, s0: float, strike: float, r: float, sigma: float,
-                   t: float):
+                   *, block_t: int, num_steps: int, s0: float, strike: float,
+                   r: float, sigma: float, t: float):
     root = (root_hi_ref[...], root_lo_ref[...])
     ctr = (ctr_hi_ref[...], ctr_lo_ref[...])
-    u1 = _uniform(_bits(root, ctr, (hx_hi_ref[...], hx_lo_ref[...])))
-    u2 = _uniform(_bits(root, ctr, (hy_hi_ref[...], hy_lo_ref[...])))
-    tiny = np.float32(1.1754944e-38)
-    rad = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(u1, tiny)))
-    z = rad * jnp.cos(2.0 * np.float32(jnp.pi) * u2)
+    u1 = _uniform_draw(root, ctr, (hx_hi_ref[...], hx_lo_ref[...]))
+    u2 = _uniform_draw(root, ctr, (hy_hi_ref[...], hy_lo_ref[...]))
+    z = sampler_mod.box_muller(u1, u2)
     drift = np.float32((r - 0.5 * sigma * sigma) * t)
     vol = np.float32(sigma) * jnp.sqrt(np.float32(t))
     st = np.float32(s0) * jnp.exp(drift + vol * z)
     payoff = jnp.maximum(st - np.float32(strike), 0.0) * \
         jnp.exp(np.float32(-r * t))
+    valid = _row_mask(u1.shape[0], u1.shape[1], block_t, num_steps)
+    payoff = jnp.where(valid, payoff, jnp.zeros_like(payoff))
     o_ref[...] = jnp.sum(payoff, axis=0, keepdims=True)
 
 
@@ -79,7 +91,6 @@ def _launch(kernel, roots, ctr_rows, hx, hy, out_dtype, *, block_t, block_s,
     bt = min(block_t, _pad_to(T, 8))
     bs = min(block_s, _pad_to(S, 128))
     Tp, Sp = _pad_to(T, bt), _pad_to(S, bs)
-    assert Tp == T, "num draws must be a multiple of the T block"
 
     def pad_col(v):
         return jnp.pad(v, (0, Tp - T)).reshape(Tp, 1)
@@ -91,7 +102,7 @@ def _launch(kernel, roots, ctr_rows, hx, hy, out_dtype, *, block_t, block_s,
     col_spec = pl.BlockSpec((bt, 1), lambda i, j: (i, 0))
     row_spec = pl.BlockSpec((1, bs), lambda i, j: (0, j))
     partials = pl.pallas_call(
-        kernel,
+        functools.partial(kernel, block_t=bt, num_steps=T),
         grid=grid,
         in_specs=[col_spec, col_spec, col_spec, col_spec,
                   row_spec, row_spec, row_spec, row_spec],

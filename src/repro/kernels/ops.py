@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine, stream as stream_mod
-from repro.core.u64 import U32
 from repro.kernels import fused_dropout as _fd
 from repro.kernels import mc as _mc
 
@@ -40,23 +39,26 @@ def h_table(seed: int, num_streams: int, purpose: int = 0
 
 @functools.partial(jax.jit, static_argnames=(
     "num_streams", "num_steps", "mode", "offset", "seed", "block_t",
-    "block_s", "use_kernel", "deco", "backend"))
+    "block_s", "use_kernel", "deco", "backend", "sampler", "out_dtype"))
 def thundering_bulk(*, seed: int, num_streams: int, num_steps: int,
                     mode: str = "ctr", offset: int = 0,
                     block_t: int = engine.DEFAULT_BLOCK_T,
                     block_s: int = engine.DEFAULT_BLOCK_S,
                     use_kernel: bool = True,
                     deco: str = "splitmix64",
-                    backend: Optional[str] = None) -> jnp.ndarray:
-    """(num_steps, num_streams) uint32 MISRN block (time-major).
+                    backend: Optional[str] = None,
+                    sampler: str = "bits",
+                    out_dtype: str = "float32") -> jnp.ndarray:
+    """(num_steps, num_streams) MISRN block (time-major).
 
-    ``backend`` names an engine backend explicitly; otherwise
-    ``use_kernel`` keeps its historical meaning (True -> "pallas",
-    False -> "ref").
+    ``sampler``/``out_dtype`` select the fused output stage (uint32 bits
+    by default; see ``repro.core.sampler``).  ``backend`` names an engine
+    backend explicitly; otherwise ``use_kernel`` keeps its historical
+    meaning (True -> "pallas", False -> "ref").
     """
     plan = engine.make_plan(seed=seed, num_streams=num_streams,
                             num_steps=num_steps, offset=offset, mode=mode,
-                            deco=deco)
+                            deco=deco, sampler=sampler, out_dtype=out_dtype)
     be = backend or ("pallas" if use_kernel else "ref")
     return engine.generate(plan, backend=be, block_t=block_t,
                            block_s=block_s)
@@ -79,11 +81,13 @@ def fused_dropout(x: jnp.ndarray, stream: stream_mod.ThunderStream,
     last = shape[-1] if len(shape) >= 1 else 1
     x2 = x.reshape(n // last, last)
     if not use_kernel:
-        plan = engine.plan_for_stream(stream, n)
-        bits = engine.generate_flat(plan).reshape(x2.shape)
-        thresh = _fd.keep_threshold(rate)
+        # keep mask = engine bernoulli sampler at p = 1 - rate: the same
+        # exact host-int threshold as the kernel's keep_threshold.
+        plan = engine.plan_for_stream(stream, n,
+                                      sampler=f"bernoulli({1.0 - rate!r})")
+        keep = engine.generate_flat(plan).reshape(x2.shape)
         scale = jnp.asarray(1.0 / (1.0 - rate), x.dtype)
-        out = jnp.where(bits < U32(thresh), x2 * scale, jnp.zeros_like(x2))
+        out = jnp.where(keep, x2 * scale, jnp.zeros_like(x2))
         return out.reshape(shape)
     h = (stream.h_hi, stream.h_lo)
     x0 = (stream.x0_hi, stream.x0_lo)
@@ -121,8 +125,8 @@ def estimate_pi(*, seed: int, num_lanes: int, draws_per_lane: int,
         inside = jnp.sum(partials.astype(jnp.float32))
     else:
         from repro.kernels import ref
-        ux = ref.uniform_from_bits(engine.generate(px, backend="ref"))
-        uy = ref.uniform_from_bits(engine.generate(py, backend="ref"))
+        ux = engine.sample(px, sampler="uniform", backend="ref")
+        uy = engine.sample(py, sampler="uniform", backend="ref")
         inside = jnp.sum(ref.mc_pi_from_uniforms(ux, uy).astype(jnp.float32))
     total = num_lanes * draws_per_lane
     return 4.0 * inside / total
@@ -149,8 +153,8 @@ def price_option(*, seed: int, num_lanes: int, draws_per_lane: int,
         payoff_sum = jnp.sum(partials)
     else:
         from repro.kernels import ref
-        u1 = ref.uniform_from_bits(engine.generate(px, backend="ref"))
-        u2 = ref.uniform_from_bits(engine.generate(py, backend="ref"))
+        u1 = engine.sample(px, sampler="uniform", backend="ref")
+        u2 = engine.sample(py, sampler="uniform", backend="ref")
         payoff_sum = jnp.sum(ref.mc_option_from_uniforms(
             u1, u2, s0, strike, r, sigma, t))
     total = num_lanes * draws_per_lane

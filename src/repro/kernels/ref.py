@@ -17,7 +17,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import lcg, splitmix, u64, xorshift
+from repro.core import lcg, sampler, splitmix, u64, xorshift
 from repro.core.u64 import U32, U64Pair
 
 
@@ -105,8 +105,8 @@ def fused_dropout(x: jnp.ndarray, h: U64Pair, x0: U64Pair, ctr0: U64Pair,
 
 
 def uniform_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
-    """U[0,1) float32 from the top 24 bits (matches stream.uniform)."""
-    return (bits >> U32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+    """U[0,1) float32 from the top 24 bits (the shared sampler stage)."""
+    return sampler.uniform_from_bits(bits)
 
 
 def mc_pi_from_uniforms(ux: jnp.ndarray, uy: jnp.ndarray) -> jnp.ndarray:
@@ -125,10 +125,8 @@ def mc_pi_partial(x0: U64Pair, hx: U64Pair, hy: U64Pair, num_draws: int,
 
 
 def box_muller(u1: jnp.ndarray, u2: jnp.ndarray) -> jnp.ndarray:
-    """Standard normal from two U[0,1) arrays (cos branch)."""
-    tiny = jnp.float32(1.1754944e-38)
-    r = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(u1, tiny)))
-    return r * jnp.cos(2.0 * jnp.float32(jnp.pi) * u2)
+    """Standard normal from two U[0,1) arrays (the shared sampler stage)."""
+    return sampler.box_muller(u1, u2)
 
 
 def mc_option_from_uniforms(u1: jnp.ndarray, u2: jnp.ndarray, s0: float,

@@ -192,6 +192,12 @@ plan = engine.make_plan(seed=29, num_streams=64, num_steps=16,
 ok["pallas_faithful"] = bool(np.array_equal(
     np.asarray(engine.generate(plan, backend="xla")),
     np.asarray(engine.generate_sharded(plan, backend="pallas"))))
+# sampler stage rides through the shard_map fan-out (uneven split, bf16)
+plan = engine.make_plan(seed=37, num_streams=26, num_steps=16,
+                        sampler="uniform", out_dtype="bfloat16")
+ok["sampler"] = bool(np.array_equal(
+    np.asarray(engine.generate(plan, backend="xla")).view(np.uint16),
+    np.asarray(engine.generate_sharded(plan)).view(np.uint16)))
 print(json.dumps({"devices": len(jax.devices()), **ok}))
 """
 
@@ -211,3 +217,4 @@ def test_generate_sharded_multi_device_subprocess():
     assert rep["devices"] == 4
     assert rep["ctr"] and rep["faithful"] and rep["uneven"]
     assert rep["pallas_faithful"]
+    assert rep["sampler"]

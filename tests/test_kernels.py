@@ -199,6 +199,35 @@ def test_pi_block_shape_invariance():
     assert a == pytest.approx(b, abs=1e-12)
 
 
+@pytest.mark.parametrize("draws", [37, 200, 777])
+def test_pi_kernel_awkward_draw_count(draws):
+    """T need not be a tile multiple: padded rows are masked out of the
+    partial reductions (would previously assert)."""
+    a = float(ops.estimate_pi(seed=6, num_lanes=130, draws_per_lane=draws,
+                              use_kernel=True))
+    b = float(ops.estimate_pi(seed=6, num_lanes=130, draws_per_lane=draws,
+                              use_kernel=False))
+    assert a == pytest.approx(b, abs=1e-12)
+
+
+def test_pi_kernel_awkward_draws_multi_tile():
+    """Masking composes with a multi-tile T grid (only the LAST tile has
+    padded rows)."""
+    a = float(ops.estimate_pi(seed=6, num_lanes=130, draws_per_lane=37,
+                              use_kernel=True, block_t=8))
+    b = float(ops.estimate_pi(seed=6, num_lanes=130, draws_per_lane=37,
+                              use_kernel=False))
+    assert a == pytest.approx(b, abs=1e-12)
+
+
+def test_option_kernel_awkward_draw_count():
+    a = float(ops.price_option(seed=6, num_lanes=130, draws_per_lane=37,
+                               use_kernel=True))
+    b = float(ops.price_option(seed=6, num_lanes=130, draws_per_lane=37,
+                               use_kernel=False))
+    assert a == pytest.approx(b, rel=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # fmix32 decorrelator variant (beyond-paper §Perf/H3)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,268 @@
+"""Fused sampler pipeline: every sampler x backend x mode bit/value-exact
+vs the ref oracle, fusion (single pallas_call, no uint32 intermediate),
+open-interval / exact-threshold guarantees, and distribution moments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, sampler as sampler_mod, stream as stream_mod
+
+BACKENDS = ("ref", "xla", "pallas")
+SAMPLERS = ("uniform", "normal", "bernoulli(0.3)")
+DTYPES = ("float32", "bfloat16")
+
+
+def _raw(a):
+    """Bit view for exact comparison (bf16/bool-safe)."""
+    a = np.asarray(a)
+    return a.view(np.uint16) if a.dtype == jnp.bfloat16 else a
+
+
+def _ulp_diff(a, b):
+    """Max ULP distance between two equal-dtype float arrays."""
+    a, b = np.asarray(a), np.asarray(b)
+    itype = np.int16 if a.dtype == jnp.bfloat16 else np.int32
+    ai = a.view(itype).astype(np.int64)
+    bi = b.view(itype).astype(np.int64)
+    # map the sign-magnitude float ordering onto monotone integers
+    sign_bit = np.int64(1) << (8 * itype(0).itemsize - 1)
+    ai = np.where(ai < 0, (sign_bit - 1) - ai, ai)
+    bi = np.where(bi < 0, (sign_bit - 1) - bi, bi)
+    return int(np.abs(ai - bi).max()) if a.size else 0
+
+
+def _assert_matches(out, base, sampler, ctx):
+    """Bit-exact for bits/uniform/bernoulli (pure integer/multiply
+    pipelines); exact to 2 ULP for normal, whose log and cos/sin may each
+    take SIMD-vs-remainder libm paths that differ in the last bit when
+    the backends' padded shapes differ (XLA:CPU vectorization)."""
+    assert out.shape == base.shape and out.dtype == base.dtype, ctx
+    if sampler.startswith("normal"):
+        assert _ulp_diff(out, base) <= 2, ctx
+    else:
+        assert np.array_equal(_raw(out), _raw(base)), ctx
+
+
+# ---------------------------------------------------------------------------
+# backend parity: value-exact vs the ref oracle on awkward shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+@pytest.mark.parametrize("mode", ["ctr", "faithful"])
+@pytest.mark.parametrize("sampler", SAMPLERS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sampler_backend_parity(backend, mode, sampler, dtype):
+    plan = engine.make_plan(seed=91, num_streams=36, num_steps=12, offset=4,
+                            mode=mode, sampler=sampler, out_dtype=dtype)
+    base = engine.generate(plan, backend="ref")
+    out = engine.generate(plan, backend=backend)
+    _assert_matches(out, base, sampler, (backend, mode, sampler, dtype))
+
+
+@pytest.mark.parametrize("T,S", [(10, 4), (40, 257), (8, 128), (256, 130)])
+def test_sampler_awkward_shapes_pallas(T, S):
+    """Pallas tiling/padding never leaks into real rows, any sampler."""
+    for sampler in SAMPLERS:
+        plan = engine.make_plan(seed=17, num_streams=S, num_steps=T,
+                                sampler=sampler)
+        _assert_matches(engine.generate(plan, backend="pallas"),
+                        engine.generate(plan, backend="ref"),
+                        sampler, (T, S, sampler))
+
+
+def test_sampler_block_shape_invariance():
+    """Box-Muller pairing is tiling-independent (bt even by construction)."""
+    plan = engine.make_plan(seed=19, num_streams=256, num_steps=64,
+                            sampler="normal")
+    base = np.asarray(engine.generate(plan, backend="pallas"))
+    for bt, bs in [(8, 128), (16, 128), (32, 256)]:
+        out = np.asarray(engine.generate(plan, backend="pallas",
+                                         block_t=bt, block_s=bs))
+        assert np.array_equal(out, base), (bt, bs)
+
+
+def test_normal_odd_block_t_rounded_to_sublane():
+    """A raw odd block_t must not flip Box-Muller pairing parity across
+    tiles: tile_t rounds it down to the dtype's sublane multiple."""
+    from repro.kernels import thundering_block as tb
+    assert tb.tile_t(9, 64, jnp.float32) == 8
+    assert tb.tile_t(24, 64, jnp.bfloat16) == 16
+    assert tb.tile_t(8, 64, jnp.bool_) == 32
+    for mode in ("ctr", "faithful"):
+        plan = engine.make_plan(seed=7, num_streams=8, num_steps=32,
+                                mode=mode, sampler="normal")
+        _assert_matches(engine.generate(plan, backend="pallas", block_t=9),
+                        engine.generate(plan, backend="ref"),
+                        "normal", mode)
+
+
+def test_sample_override_and_fmix32():
+    plan = engine.make_plan(seed=23, num_streams=36, num_steps=12,
+                            deco="fmix32")
+    for backend in BACKENDS:
+        out = engine.sample(plan, sampler="uniform", backend=backend)
+        assert out.dtype == jnp.float32
+        assert np.array_equal(
+            np.asarray(out),
+            np.asarray(engine.sample(plan, sampler="uniform",
+                                     backend="ref")))
+
+
+# ---------------------------------------------------------------------------
+# fusion: one pallas_call, no (T, S) uint32 block in the outer jaxpr
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampler", ["uniform", "normal"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pallas_sampler_is_fused(sampler, dtype):
+    T, S = 64, 256
+    plan = engine.make_plan(seed=3, num_streams=S, num_steps=T,
+                            sampler=sampler, out_dtype=dtype)
+    jaxpr = jax.make_jaxpr(
+        lambda: engine.generate(plan, backend="pallas"))()
+    calls = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "pallas_call"]
+    assert len(calls) == 1, [e.primitive.name for e in jaxpr.jaxpr.eqns]
+    # No intermediate the size of the bit block may exist outside the
+    # kernel: the uint32 (T, S) block must live and die in VMEM.
+    for eqn in jaxpr.jaxpr.eqns:
+        for var in eqn.outvars:
+            aval = var.aval
+            assert not (aval.dtype == jnp.uint32 and aval.size >= T * S), \
+                f"uint32 intermediate {aval.shape} escapes the kernel"
+
+
+# ---------------------------------------------------------------------------
+# transform guarantees
+# ---------------------------------------------------------------------------
+
+def test_normal_open_interval_no_log0():
+    """All-zero and all-one bits map to finite normals (log(0) guarded)."""
+    bits = jnp.array([[0, 0xFFFFFFFF], [0xFFFFFFFF, 0]], jnp.uint32)
+    z = np.asarray(sampler_mod.apply(bits, ("normal", None)))
+    assert np.all(np.isfinite(z))
+    u = np.asarray(sampler_mod.apply(bits, ("uniform", None)))
+    assert np.all((u >= 0.0) & (u < 1.0))
+
+
+def test_normal_odd_t_raises():
+    plan = engine.make_plan(seed=3, num_streams=4, num_steps=7,
+                            sampler="normal")
+    with pytest.raises(ValueError, match="even T"):
+        engine.generate(plan)
+
+
+def test_unknown_sampler_and_dtype_raise():
+    with pytest.raises(ValueError, match="unknown sampler"):
+        engine.generate(engine.make_plan(seed=1, num_streams=4, num_steps=8,
+                                         sampler="gamma"))
+    with pytest.raises(ValueError, match="unknown out_dtype"):
+        engine.generate(engine.make_plan(seed=1, num_streams=4, num_steps=8,
+                                         sampler="uniform",
+                                         out_dtype="float64"))
+
+
+def test_uniform_matches_stream_transform():
+    """sampler='uniform' == uniform_from_bits(sampler='bits') elementwise."""
+    plan = engine.make_plan(seed=7, num_streams=12, num_steps=10)
+    bits = engine.generate(plan, backend="xla")
+    u = engine.sample(plan, sampler="uniform", backend="xla")
+    assert np.array_equal(np.asarray(u),
+                          np.asarray(sampler_mod.uniform_from_bits(bits)))
+
+
+def test_bernoulli_threshold_exact_near_one():
+    """p near 1 keeps the exact host-int threshold (no float32 wrap)."""
+    p = 1.0 - 2.0 ** -33  # rounds to 2**32 - 1, not 2**32
+    assert sampler_mod.bernoulli_threshold(p) == (1 << 32) - 1
+    plan = engine.make_plan(seed=9, num_streams=8, num_steps=16,
+                            sampler=f"bernoulli({p!r})")
+    bits = np.asarray(engine.sample(plan, sampler="bits", backend="xla"))
+    mask = np.asarray(engine.generate(plan, backend="xla"))
+    assert np.array_equal(mask, bits != 0xFFFFFFFF)
+
+
+def test_bernoulli_endpoints_constant():
+    for p, want in [(0.0, False), (1.0, True), (-2.0, False), (3.0, True)]:
+        plan = engine.make_plan(seed=9, num_streams=4, num_steps=8,
+                                sampler=f"bernoulli({p})")
+        for backend in BACKENDS:
+            out = np.asarray(engine.generate(plan, backend=backend))
+            assert out.dtype == bool and np.all(out == want), (p, backend)
+
+
+def test_bernoulli_matches_stream_api():
+    """Column s of a bernoulli block == stream.bernoulli of the derived
+    stream (same bits, same exact threshold)."""
+    T, S, p = 24, 8, 0.37
+    plan = engine.make_plan(seed=55, num_streams=S, num_steps=T,
+                            sampler=f"bernoulli({p})")
+    blk = np.asarray(engine.generate(plan, backend="xla"))
+    fam = stream_mod.new_stream(55, 0)
+    for s in (0, 5):
+        st = fam._replace(h_hi=plan.h[0][s], h_lo=plan.h[1][s])
+        assert np.array_equal(blk[:, s],
+                              np.asarray(stream_mod.bernoulli(st, p, (T,))))
+
+
+def test_stream_uniforms_normals_match_engine():
+    st = stream_mod.advance(stream_mod.new_stream(42, 1), 6)
+    u = stream_mod.uniforms(st, (5, 4))
+    assert np.array_equal(
+        np.asarray(u).ravel(),
+        np.asarray(engine.sample(engine.plan_for_stream(st, 20),
+                                 sampler="uniform"))[:, 0])
+    # odd count: one pair tail generated and dropped
+    z = stream_mod.normals(st, (7,))
+    z8 = stream_mod.normals(st, (8,))
+    assert np.array_equal(np.asarray(z), np.asarray(z8)[:7])
+    assert stream_mod.normals(st, (6,), jnp.bfloat16).dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# sharded fan-out carries the sampler stage
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampler,dtype", [
+    ("uniform", "bfloat16"), ("normal", "float32"), ("bernoulli(0.6)",
+                                                     "float32")])
+def test_generate_sharded_sampler(sampler, dtype):
+    plan = engine.make_plan(seed=13, num_streams=22, num_steps=16,
+                            sampler=sampler, out_dtype=dtype)
+    a = engine.generate(plan, backend="xla")
+    b = engine.generate_sharded(plan)
+    _assert_matches(b, a, sampler, (sampler, dtype))
+
+
+# ---------------------------------------------------------------------------
+# moments (S = 4096): mean/var within 4 sigma of the distribution
+# ---------------------------------------------------------------------------
+
+def _moment_block(sampler, T=64, S=4096):
+    plan = engine.make_plan(seed=1234, num_streams=S, num_steps=T,
+                            sampler=sampler)
+    return np.asarray(engine.generate(plan, backend="xla"),
+                      dtype=np.float64), T * S
+
+
+def test_uniform_moments():
+    u, n = _moment_block("uniform")
+    assert abs(u.mean() - 0.5) < 4 * np.sqrt(1 / 12 / n)
+    # var of the sample variance of U(0,1): (E[x^4]-var^2)/n with x
+    # centered -> 1/180n; 4 sigma
+    assert abs(u.var() - 1 / 12) < 4 * np.sqrt(1 / 180 / n)
+
+
+def test_normal_moments():
+    z, n = _moment_block("normal")
+    assert abs(z.mean()) < 4 / np.sqrt(n)
+    assert abs(z.var() - 1.0) < 4 * np.sqrt(2.0 / n)
+    # Box-Muller pair rows must not correlate: lag-1 correlation along T
+    c = np.corrcoef(z[:-1].ravel(), z[1:].ravel())[0, 1]
+    assert abs(c) < 4 / np.sqrt(n)
+
+
+def test_bernoulli_moments():
+    p = 0.3
+    m, n = _moment_block(f"bernoulli({p})")
+    assert abs(m.mean() - p) < 4 * np.sqrt(p * (1 - p) / n)

@@ -82,3 +82,20 @@ def test_substream_outputs_differ():
     for i in range(8):
         for j in range(i + 1, 8):
             assert not np.array_equal(outs[i], outs[j])
+
+
+def test_jump_batch_matches_per_state_jump():
+    """Vectorized whole-table GF(2) jump == python-int jump per state."""
+    tbl = xorshift.lane_table(9)
+    for n in (0, 1, 7, 256, 1 << 20, (1 << 40) + 12345):
+        batched = xorshift.jump_batch(tbl, n)
+        for s in range(9):
+            exp = xorshift.jump(tuple(int(w) for w in tbl[s]), n)
+            assert tuple(int(w) for w in batched[s]) == exp, (s, n)
+
+
+def test_jump_batch_does_not_mutate_input():
+    tbl = xorshift.lane_table(4)
+    snapshot = tbl.copy()
+    xorshift.jump_batch(tbl, 123456)
+    assert np.array_equal(tbl, snapshot)
