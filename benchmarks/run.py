@@ -22,6 +22,8 @@ def main() -> None:
         ("quality", quality.run),          # Tables 2/3/4
         ("throughput",                     # Figs 5/6 + fused samplers
          lambda o: throughput.run(o, records=records)),
+        ("pipelined",                      # block delivery: FIFO analogue
+         lambda o: throughput.pipelined_smoke(o, records=records)),
         ("comparison", comparison.run),    # Tables 5/6
         ("apps", apps.run),                # Figs 8/9 + Table 7
         ("roofline", roofline.run),        # deliverable (g)

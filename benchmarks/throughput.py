@@ -11,13 +11,15 @@ projected TPU bound (bulk generation writes 4 B/sample; one v5e chip at
 written bytes -> ~410 GSample/s ceiling; the fused-consumer kernels in
 benchmarks/apps.py beat both by never writing the samples).
 
-``run``/``smoke``/``sampler_smoke`` also append machine-readable row
-dicts (GSample/s per backend/sampler/dtype/variant) that ``run.py`` and
-``__main__`` dump to ``BENCH_throughput.json`` — the perf trajectory
-file.  The sampler section times the fused one-pass path (transform
-applied where the bits are generated) against the historical two-pass
-path (uint32 block materialized by one jitted call, transformed by a
-second), which is the HBM round-trip the sampler stage deletes.
+``run``/``smoke``/``sampler_smoke``/``pipelined_smoke`` also append
+machine-readable row dicts (GSample/s per backend/sampler/dtype/variant)
+that ``run.py`` and ``__main__`` dump to ``BENCH_throughput.json`` — the
+perf trajectory file.  The sampler section times the fused one-pass path
+(transform applied where the bits are generated) against the historical
+two-pass path (uint32 block materialized by one jitted call, transformed
+by a second), which is the HBM round-trip the sampler stage deletes.
+``pipelined_smoke`` times the block-delivery layer: double-buffered
+producer vs synchronous lease+generate, and the 1-D vs 2-D mesh rows.
 """
 from __future__ import annotations
 
@@ -32,6 +34,7 @@ import numpy as np
 from benchmarks.common import row, time_fn
 from repro.core import engine, sampler as sampler_mod
 from repro.kernels import ops
+from repro.runtime import BlockService
 
 T_STEPS = 4096
 HBM_BW = 819e9
@@ -203,9 +206,94 @@ def sampler_smoke(out=print, records=None) -> None:
     _sampler_section(out, records, s=2048, t=2048, iters=2)
 
 
+def _consume(block):
+    """Stand-in application kernel: one jitted reduction per block (so the
+    double-buffered producer has real consumer work to overlap with)."""
+    return jnp.sum(jnp.asarray(block, jnp.float32) if block.dtype ==
+                   jnp.uint32 else block)
+
+
+def pipelined_smoke(out=print, records=None, *, s: int = 512, t: int = 2048,
+                    n_blocks: int = 8) -> None:
+    """Block-delivery smoke: double-buffered producer vs synchronous
+    lease+generate, and the 1-D vs 2-D mesh fan-out, all bit-checked.
+
+    On this 1-CPU container the producer thread shares the XLA device
+    with the consumer, so the double-buffer win is host-dispatch overlap
+    only; the HBM-level story is the TPU projection (see EXPERIMENTS.md).
+    """
+    n = s * t * n_blocks
+
+    # one standing service per variant: successive timed calls consume
+    # FRESH windows (the ledger forbids reuse) through one cached window
+    # executable — the steady-state delivery cost, not trace time.
+    svc_s = BlockService(seed=23)
+    svc_s.open("bench", num_streams=s)
+    svc_p = BlockService(seed=23)
+    svc_p.open("bench", num_streams=s)
+
+    def run_sync():
+        acc = []
+        for _ in range(n_blocks):
+            acc.append(_consume(svc_s.take("bench", t)))
+        return jax.block_until_ready(jnp.stack(acc))
+
+    def run_pipelined():
+        with svc_p.producer("bench", t, count=n_blocks) as prod:
+            acc = [_consume(block) for _, block in prod]
+        return jax.block_until_ready(jnp.stack(acc))
+
+    # same seed + same windows => bit-identical first pass
+    base = np.asarray(run_sync())
+    assert np.array_equal(base, np.asarray(run_pipelined())), \
+        "double-buffered blocks disagree with synchronous"
+    sec_s = time_fn(run_sync, iters=3, warmup=1)
+    sec_p = time_fn(run_pipelined, iters=3, warmup=1)
+    gs_s, gs_p = n / sec_s / 1e9, n / sec_p / 1e9
+    out(row(f"pipelined/sync/S={s}", sec_s * 1e6,
+            f"{gs_s:.3f} GSample/s lease+generate per block"))
+    out(row(f"pipelined/double_buffered/S={s}", sec_p * 1e6,
+            f"{gs_p:.3f} GSample/s x{sec_s / sec_p:.2f} vs sync"))
+    _record(records, name=f"pipelined/S={s}", backend="service",
+            sampler="bits", dtype="uint32", variant="sync",
+            num_streams=s, num_steps=t * n_blocks,
+            us_per_call=sec_s * 1e6, gsamples_per_s=gs_s)
+    _record(records, name=f"pipelined/S={s}", backend="service",
+            sampler="bits", dtype="uint32", variant="double_buffered",
+            num_streams=s, num_steps=t * n_blocks,
+            us_per_call=sec_p * 1e6, gsamples_per_s=gs_p,
+            speedup_vs_two_pass=sec_s / sec_p)
+
+    # 1-D vs 2-D mesh fan-out (degenerate single-device grids here; the
+    # row exists so the TPU run records the real (hosts, streams) split)
+    plan = engine.make_plan(seed=23, num_streams=s, num_steps=t)
+    base = np.asarray(engine.generate(plan, backend="xla"))
+    devs = np.array(jax.devices())
+    meshes = {
+        "mesh1d": (jax.sharding.Mesh(devs, ("streams",)), ("streams",)),
+        "mesh2d": (jax.sharding.Mesh(devs.reshape(1, -1),
+                                     ("hosts", "streams")),
+                   ("hosts", "streams")),
+    }
+    for name, (mesh, axes) in meshes.items():
+        fn = jax.jit(functools.partial(engine.generate_sharded, plan,
+                                       mesh=mesh, axis_names=axes))
+        assert np.array_equal(base, np.asarray(fn())), name
+        sec = time_fn(fn, iters=2)
+        gs = s * t / sec / 1e9
+        out(row(f"pipelined/{name}/S={s}", sec * 1e6,
+                f"{gs:.3f} GSample/s over {mesh.devices.size} device(s) "
+                f"axes={'x'.join(axes)}"))
+        _record(records, name=f"pipelined/{name}/S={s}", backend="sharded",
+                sampler="bits", dtype="uint32", variant=name,
+                num_streams=s, num_steps=t, us_per_call=sec * 1e6,
+                gsamples_per_s=gs)
+
+
 if __name__ == "__main__":
     records = []
     smoke(records=records)
     sampler_smoke(records=records)
+    pipelined_smoke(records=records)
     write_bench_json(records)
     print(f"# wrote {BENCH_JSON} ({len(records)} rows)")

@@ -2,7 +2,9 @@
 
 Sweeps the number of draws like the paper's figure; reports estimate,
 error and throughput for the ThundeRiNG-fused path and a jax.random
-baseline.
+baseline.  Draw windows come from a ``BlockService`` lease ledger, so
+every sweep point consumes fresh, disjoint randomness of one family —
+re-spending a window would raise, not silently correlate the estimates.
 
   PYTHONPATH=src python examples/monte_carlo_pi.py
 """
@@ -13,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.runtime import BlockService
 
 
 def vendor_pi(n):
@@ -22,19 +25,25 @@ def vendor_pi(n):
 
 
 def main():
+    lanes = 1024
+    service = BlockService(seed=7)
+    service.open("mc/pi", num_streams=lanes)
     print(f"{'draws':>12} {'estimate':>10} {'|err|':>9} {'Mdraw/s':>9}")
     for draws_per_lane in (256, 1024, 4096):
-        lanes = 1024
         n = lanes * draws_per_lane
-        f = lambda: ops.estimate_pi(seed=7, num_lanes=lanes,
+        lease = service.lease("mc/pi", draws_per_lane)
+        f = lambda: ops.estimate_pi(seed=service.seed, num_lanes=lanes,
                                     draws_per_lane=draws_per_lane,
-                                    use_kernel=False)
-        f()  # compile
+                                    offset=lease.lo, use_kernel=False)
+        f()  # compile (replaying a window is recompute, not re-spend)
         t0 = time.perf_counter()
         est = float(f())
         dt = time.perf_counter() - t0
+        service.commit(lease)
         print(f"{n:12d} {est:10.6f} {abs(est - pi):9.2e} "
               f"{n / dt / 1e6:9.1f}  (thundering)")
+    spent = service.ledger_state()["channels"]["mc/pi"]["committed"]
+    print(f"# mc/pi windows consumed: {spent}")
     n = 1024 * 4096
     jax.block_until_ready(vendor_pi(n))
     t0 = time.perf_counter()

@@ -457,6 +457,7 @@ def default_mesh(axis_name: str = "streams") -> jax.sharding.Mesh:
 
 def generate_sharded(plan: GenPlan, *, mesh: Optional[jax.sharding.Mesh] = None,
                      axis_name: str = "streams",
+                     axis_names: Optional[Tuple[str, ...]] = None,
                      backend: Optional[str] = None,
                      block_t: int = DEFAULT_BLOCK_T,
                      block_s: int = DEFAULT_BLOCK_S) -> jnp.ndarray:
@@ -468,30 +469,48 @@ def generate_sharded(plan: GenPlan, *, mesh: Optional[jax.sharding.Mesh] = None,
     counter addressing.  No collective appears in the compiled program;
     the result is bit-identical to ``generate`` on one device.
 
-    S is padded up to a multiple of the mesh size and sliced back.
+    ``axis_names`` selects an N-D fan-out: the stream axis is sharded
+    over the PRODUCT of the named mesh axes (e.g. ``("hosts", "streams")``
+    for the 2-D multi-host layout, or a production mesh's
+    ``("data", "model")``).  Because the stream axis carries GLOBAL
+    column identity — shard (i, j) of an (H, D) grid owns columns
+    ``[(i*D + j) * S_loc, ...)`` — the result stays bit-identical to the
+    1-D and single-device paths for any mesh factorization.  When
+    ``axis_names`` is None the historical 1-D ``axis_name`` is used.
+
+    S is padded up to a multiple of the total device count and sliced
+    back.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    if axis_names is None:
+        axis_names = (axis_name,)
+    axes = tuple(axis_names)
     if mesh is None:
+        if axes != (axis_name,):
+            raise ValueError("axis_names requires an explicit mesh")
         mesh = default_mesh(axis_name)
-    if axis_name not in mesh.axis_names:
-        raise ValueError(f"mesh has no axis {axis_name!r}")
-    n_dev = mesh.shape[axis_name]
+    for ax in axes:
+        if ax not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {ax!r}; has {mesh.axis_names}")
+    n_dev = 1
+    for ax in axes:
+        n_dev *= mesh.shape[ax]
     T, S = plan.shape
     Sp = _pad_to(S, n_dev)
 
     h_hi = jnp.pad(plan.h[0], (0, Sp - S))
     h_lo = jnp.pad(plan.h[1], (0, Sp - S))
     operands = [h_hi, h_lo]
-    in_specs = [P(axis_name), P(axis_name)]
+    in_specs = [P(axes), P(axes)]
     if plan.mode == "faithful":
         # substream identity follows the global stream index: prep the
         # full (Sp, 4) start-state table once, shard it with h.
         padded = dataclasses.replace(plan, h=(h_hi, h_lo))
         xs0 = _faithful_start_states(padded)
         operands.append(xs0)
-        in_specs.append(P(axis_name, None))
+        in_specs.append(P(axes, None))
 
     def local(hh, hl, *rest):
         lp = dataclasses.replace(plan, h=(hh, hl))
@@ -500,5 +519,5 @@ def generate_sharded(plan: GenPlan, *, mesh: Optional[jax.sharding.Mesh] = None,
                         block_s=block_s, xs0=lxs0)
 
     out = shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
-                    out_specs=P(None, axis_name), check_rep=False)(*operands)
+                    out_specs=P(None, axes), check_rep=False)(*operands)
     return out[:, :S]

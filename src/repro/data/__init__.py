@@ -1,3 +1,3 @@
-from repro.data.pipeline import SyntheticLMPipeline
+from repro.data.pipeline import LeasedBatchFeeder, SyntheticLMPipeline
 
-__all__ = ["SyntheticLMPipeline"]
+__all__ = ["LeasedBatchFeeder", "SyntheticLMPipeline"]

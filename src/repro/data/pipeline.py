@@ -11,6 +11,16 @@ is the fault-tolerance property the counter-addressable design buys:
     cursors;
   * bitwise-identical batches under any device count or mesh shape.
 
+Delivery goes through the block layer (``runtime.blocks``):
+``LeasedBatchFeeder`` registers the pipeline as a ``BlockService``
+channel whose window unit is ONE OPTIMIZER STEP — step ``s`` is the
+window ``[s, s+1)``, i.e. the counter range of the derived leaf that
+batch consumes.  A producer thread leases and dispatches batch ``s+1``
+while step ``s`` computes (double-buffering), the lease ledger makes
+feeding a step's randomness twice a structural error, and exact
+mid-epoch resume falls out of restoring the ledger snapshot stored in
+the checkpoint.
+
 The token distribution is Zipfian over the vocab (a rough LM-like
 marginal) with a deterministic shift mixing so batches differ per step.
 For the paper-shaped use case (the RNG *is* the substrate under test)
@@ -68,3 +78,60 @@ class SyntheticLMPipeline:
         while True:
             yield self.batch_at(step)
             step += 1
+
+
+class LeasedBatchFeeder:
+    """Lease-accounted, double-buffered batch source for the train loop.
+
+    One ``BlockService`` channel (``"data/batches"``, window unit = one
+    optimizer step) delivers the SAME bits as calling ``batch_at(step)``
+    directly — the batch function is unchanged and pure — but through
+    the block layer: a producer thread dispatches batch ``s+1`` while
+    the trainer runs step ``s`` (``block_until_ready``-free handoff),
+    and the lease ledger records exactly which steps' randomness has
+    been consumed.
+
+    ``batch_for(step)`` expects sequential steps; a non-sequential step
+    (restart-from-checkpoint) repositions the producer, which the ledger
+    only permits after ``service.restore_ledger`` rewound it — the
+    double-spend protection the per-step ``derive`` convention never
+    had.
+    """
+
+    CHANNEL = "data/batches"
+
+    def __init__(self, pipe: SyntheticLMPipeline, service, *,
+                 depth: int = 1):
+        self._pipe = pipe
+        self._service = service
+        self._depth = depth
+        self._jit_batch = jax.jit(lambda s: pipe.batch_at(s))
+        self._producer = None
+        self._next: Optional[int] = None
+        service.open(self.CHANNEL, window_fn=self._window)
+
+    def _window(self, lo: int, hi: int):
+        if hi != lo + 1:
+            raise ValueError(f"data windows are single steps, got "
+                             f"[{lo}, {hi})")
+        return self._jit_batch(jnp.uint32(lo))
+
+    def batch_for(self, step: int) -> Dict[str, jnp.ndarray]:
+        """The (prefetched) batch for ``step``; commits its lease."""
+        if self._producer is None or self._next != step:
+            self.reset()
+            self._producer = self._service.producer(
+                self.CHANNEL, 1, depth=self._depth, start=step)
+            self._next = step
+        lease, batch = next(self._producer)
+        assert lease.lo == step, (lease.lo, step)
+        self._next = step + 1
+        return batch
+
+    def reset(self) -> None:
+        """Close the producer and drop its unconsumed reservations (call
+        after a ledger restore, before resuming from the restored step)."""
+        if self._producer is not None:
+            self._producer.close()
+            self._producer = None
+        self._next = None

@@ -34,6 +34,21 @@ def keep_threshold(rate: float) -> int:
     return sampler.bernoulli_threshold(1.0 - rate)
 
 
+def mask_elems(shape) -> int:
+    """Counter elements a dropout mask over ``shape`` consumes.
+
+    This is the lease-sizing rule for the block-delivery layer: a
+    ``BlockService`` window feeding ``ops.fused_dropout`` must span at
+    least this many elements of the mask stream (flat row-major
+    addressing, one u32 per element — exactly the counters the kernel
+    regenerates in VREGs).
+    """
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
 def _kernel(x_ref, rb_hi_ref, rb_lo_ref, cb_hi_ref, cb_lo_ref,
             h_hi_ref, h_lo_ref, a_hi_ref, a_lo_ref, c_hi_ref, c_lo_ref,
             o_ref, *, thresh: int, scale: float, n_cols: int):

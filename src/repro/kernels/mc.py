@@ -115,6 +115,39 @@ def _launch(kernel, roots, ctr_rows, hx, hy, out_dtype, *, block_t, block_s,
     return partials[:, :S]
 
 
+def _plan_rows(px):
+    """Shared-root (roots, ctr_rows) for a coordinate plan's draw window.
+
+    The plan's counter start IS the leased window's ``ctr_lo``
+    (``engine.make_plan(offset=...)``), so a ``BlockService`` lease of
+    ``draws_per_lane`` steps maps 1:1 onto the kernel grid rows — MC
+    consumers draw from disjoint counter windows with no per-call state.
+    """
+    from repro.core import engine
+    return engine.root_and_ctr_rows(px.x0, px.ctr, px.num_steps)
+
+
+def pi_partials_from_plans(px, py, *, block_t=DEFAULT_BLOCK_T,
+                           block_s=DEFAULT_BLOCK_S,
+                           interpret=False) -> jnp.ndarray:
+    """``pi_partials`` addressed by two engine plans (x/y coordinate
+    families of one shared root, any counter window)."""
+    roots, ctr_rows = _plan_rows(px)
+    return pi_partials(roots, ctr_rows, px.h, py.h, block_t=block_t,
+                       block_s=block_s, interpret=interpret)
+
+
+def option_partials_from_plans(px, py, *, s0, strike, r, sigma, t,
+                               block_t=DEFAULT_BLOCK_T,
+                               block_s=DEFAULT_BLOCK_S,
+                               interpret=False) -> jnp.ndarray:
+    """``option_partials`` addressed by two engine plans."""
+    roots, ctr_rows = _plan_rows(px)
+    return option_partials(roots, ctr_rows, px.h, py.h, s0=s0, strike=strike,
+                           r=r, sigma=sigma, t=t, block_t=block_t,
+                           block_s=block_s, interpret=interpret)
+
+
 def pi_partials(roots, ctr_rows, hx, hy, *, block_t=DEFAULT_BLOCK_T,
                 block_s=DEFAULT_BLOCK_S, interpret=False) -> jnp.ndarray:
     """(T_tiles, S) int32 in-circle partial counts."""

@@ -64,8 +64,7 @@ def thundering_bulk(*, seed: int, num_streams: int, num_steps: int,
                            block_s=block_s)
 
 
-def fused_dropout(x: jnp.ndarray, stream: stream_mod.ThunderStream,
-                  rate: float, *, block_m: int = 8,
+def fused_dropout(x: jnp.ndarray, stream, rate: float, *, block_m: int = 8,
                   use_kernel: bool = True) -> jnp.ndarray:
     """Dropout over arbitrary-shape x, mask addressed by (stream, flat idx).
 
@@ -73,7 +72,20 @@ def fused_dropout(x: jnp.ndarray, stream: stream_mod.ThunderStream,
     tiling/sharding — deterministic under resharding and elastic restarts.
     The mask bits are the stream's engine plan; the kernel path fuses their
     generation into the read-x/write-y stream (mask never hits HBM).
+
+    ``stream`` may also be a ``BlockService`` lease (``runtime.blocks``):
+    the mask is then addressed by the lease's channel stream at its
+    window start, and the window must cover ``fused_dropout.mask_elems(
+    x.shape)`` elements — leased masks make re-using dropout randomness
+    across layers/steps a structural error instead of a bug hunt.
     """
+    if not isinstance(stream, stream_mod.ThunderStream):
+        lease = stream
+        if lease.length < _fd.mask_elems(x.shape):
+            raise ValueError(
+                f"lease window [{lease.lo}, {lease.hi}) is smaller than the "
+                f"{_fd.mask_elems(x.shape)}-element mask for shape {x.shape}")
+        stream = lease.stream()
     if rate <= 0.0:
         return x
     shape = x.shape
@@ -98,30 +110,36 @@ def fused_dropout(x: jnp.ndarray, stream: stream_mod.ThunderStream,
 
 
 def _mc_plans(seed: int, num_lanes: int, draws_per_lane: int,
-              purpose_x: int, purpose_y: int):
-    """Two engine plans (x/y coordinate stream families, shared root)."""
+              purpose_x: int, purpose_y: int, offset: int = 0):
+    """Two engine plans (x/y coordinate stream families, shared root).
+
+    ``offset`` is the draw-window start: counter rows ``[offset,
+    offset + draws_per_lane)`` — the window a ``BlockService`` lease
+    hands out, so repeated app calls never re-spend randomness.
+    """
     px = engine.make_plan(seed=seed, num_streams=num_lanes,
-                          num_steps=draws_per_lane, purpose=purpose_x)
+                          num_steps=draws_per_lane, purpose=purpose_x,
+                          offset=offset)
     py = engine.make_plan(seed=seed, num_streams=num_lanes,
-                          num_steps=draws_per_lane, purpose=purpose_y)
+                          num_steps=draws_per_lane, purpose=purpose_y,
+                          offset=offset)
     return px, py
 
 
 @functools.partial(jax.jit, static_argnames=(
     "seed", "num_lanes", "draws_per_lane", "block_t", "block_s",
-    "use_kernel"))
+    "use_kernel", "offset"))
 def estimate_pi(*, seed: int, num_lanes: int, draws_per_lane: int,
+                offset: int = 0,
                 block_t: int = _mc.DEFAULT_BLOCK_T,
                 block_s: int = _mc.DEFAULT_BLOCK_S,
                 use_kernel: bool = True) -> jnp.ndarray:
     """Monte-Carlo pi over num_lanes independent stream pairs (paper Fig. 8)."""
-    px, py = _mc_plans(seed, num_lanes, draws_per_lane, 1, 2)
+    px, py = _mc_plans(seed, num_lanes, draws_per_lane, 1, 2, offset)
     if use_kernel:
-        roots, ctr_rows = engine.root_and_ctr_rows(px.x0, px.ctr,
-                                                   draws_per_lane)
-        partials = _mc.pi_partials(roots, ctr_rows, px.h, py.h,
-                                   block_t=block_t, block_s=block_s,
-                                   interpret=_use_interpret())
+        partials = _mc.pi_partials_from_plans(px, py, block_t=block_t,
+                                              block_s=block_s,
+                                              interpret=_use_interpret())
         inside = jnp.sum(partials.astype(jnp.float32))
     else:
         from repro.kernels import ref
@@ -134,22 +152,20 @@ def estimate_pi(*, seed: int, num_lanes: int, draws_per_lane: int,
 
 @functools.partial(jax.jit, static_argnames=(
     "seed", "num_lanes", "draws_per_lane", "s0", "strike", "r", "sigma",
-    "t", "block_t", "block_s", "use_kernel"))
+    "t", "block_t", "block_s", "use_kernel", "offset"))
 def price_option(*, seed: int, num_lanes: int, draws_per_lane: int,
+                 offset: int = 0,
                  s0: float = 100.0, strike: float = 100.0, r: float = 0.05,
                  sigma: float = 0.2, t: float = 1.0,
                  block_t: int = _mc.DEFAULT_BLOCK_T,
                  block_s: int = _mc.DEFAULT_BLOCK_S,
                  use_kernel: bool = True) -> jnp.ndarray:
     """European call price via GBM Monte-Carlo (paper Fig. 9 / Table 7)."""
-    px, py = _mc_plans(seed, num_lanes, draws_per_lane, 3, 4)
+    px, py = _mc_plans(seed, num_lanes, draws_per_lane, 3, 4, offset)
     if use_kernel:
-        roots, ctr_rows = engine.root_and_ctr_rows(px.x0, px.ctr,
-                                                   draws_per_lane)
-        partials = _mc.option_partials(
-            roots, ctr_rows, px.h, py.h, s0=s0, strike=strike, r=r,
-            sigma=sigma, t=t, block_t=block_t, block_s=block_s,
-            interpret=_use_interpret())
+        partials = _mc.option_partials_from_plans(
+            px, py, s0=s0, strike=strike, r=r, sigma=sigma, t=t,
+            block_t=block_t, block_s=block_s, interpret=_use_interpret())
         payoff_sum = jnp.sum(partials)
     else:
         from repro.kernels import ref

@@ -32,5 +32,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Tiny mesh over the locally available devices (tests / examples)."""
     n = len(jax.devices())
-    data = n // model
-    return make_mesh_auto((data, model), ("data", "model"))
+    if model < 1 or n % model:
+        raise ValueError(
+            f"make_host_mesh(model={model}): {n} local device(s) cannot "
+            f"split into (data={n}/{model}, model={model}); pick a model "
+            f"axis that divides the device count")
+    return make_mesh_auto((n // model, model), ("data", "model"))
+
+
+def rng_axes(mesh) -> tuple:
+    """Mesh axes for the RNG block fan-out: ALL of them.
+
+    ``engine.generate_sharded(..., axis_names=rng_axes(mesh))`` shards
+    the stream axis over every device of a production mesh — the
+    (host, stream) 2-D layout (or 3-D with the pod axis).  Generation is
+    collective-free regardless of how the model otherwise uses the axes,
+    because every column is counter-addressed from the replicated root.
+    """
+    return tuple(mesh.axis_names)

@@ -1,7 +1,15 @@
 """Batched serving driver: prefill a batch of prompts, then step-decode.
 
+Sampling randomness comes through the block-delivery layer: with
+``temperature > 0`` the server opens a ``BlockService`` sampler channel
+and leases ONE counter window covering the whole generation
+(``gen * batch * vocab`` gumbel draws); decode step ``i`` reads the
+window slice at ``i * batch * vocab``.  Sampling is therefore
+counter-addressed (replayable from the lease alone) and the ledger makes
+re-spending a window across requests a structural error.
+
   PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke \\
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 --temperature 0.8
 """
 from __future__ import annotations
 
@@ -13,13 +21,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import stream as tstream
 from repro.data import SyntheticLMPipeline
 from repro.launch.train import pipeline_for, smoke_config
 from repro.models import registry
+from repro.runtime import BlockService
+
+SAMPLER_CHANNEL = "serve/sampler"
+
+
+def _pick(logits, sample_stream, temperature: float, draws_per_step: int):
+    """Greedy at temperature 0; else gumbel-max over one window slice."""
+    if temperature <= 0.0 or sample_stream is None:
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), \
+            sample_stream
+    tok = tstream.categorical(sample_stream,
+                              logits.astype(jnp.float32) / temperature)
+    return tok[:, None].astype(jnp.int32), \
+        tstream.advance(sample_stream, draws_per_step)
 
 
 def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
-          greedy: bool = True):
+          temperature: float = 0.0, service: BlockService = None):
     model = registry.build(cfg)
     params, _ = model.init(seed)
     pipe = pipeline_for(cfg, batch, max(prompt_len, 2), seed)
@@ -27,6 +50,15 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     prompts = {k: (v[:, :prompt_len] if k in ("tokens", "labels") else v)
                for k, v in b.items()}
     prompts.pop("labels", None)
+
+    sample_stream = None
+    lease = None
+    if temperature > 0.0:
+        service = service or BlockService(seed)
+        service.open(SAMPLER_CHANNEL)
+        lease = service.lease(SAMPLER_CHANNEL, gen * batch * cfg.vocab)
+        sample_stream = lease.stream()
+    draws_per_step = batch * cfg.vocab
 
     total_ctx = prompt_len + gen
     prefill = jax.jit(model.prefill)
@@ -40,16 +72,25 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     cache = _graft(cfg, cache, pcache, prompt_len)
     t_prefill = time.time() - t0
 
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out = [np.asarray(tok)]
-    t1 = time.time()
-    for i in range(gen - 1):
-        logits, cache = decode(params, cache, tok,
-                               jnp.int32(prompt_len + i))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t1
+    try:
+        tok, sample_stream = _pick(logits, sample_stream, temperature,
+                                   draws_per_step)
+        out = [np.asarray(tok)]
+        t1 = time.time()
+        for i in range(gen - 1):
+            logits, cache = decode(params, cache, tok,
+                                   jnp.int32(prompt_len + i))
+            tok, sample_stream = _pick(logits, sample_stream, temperature,
+                                       draws_per_step)
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t1
+    except Exception:
+        if lease is not None:
+            lease.release()      # failed request: window may be re-leased
+        raise
+    if lease is not None:
+        lease.commit()
     toks = np.concatenate(out, axis=1)
     return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
                   "decode_tok_s": batch * (gen - 1) / max(t_decode, 1e-9)}
@@ -87,13 +128,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples via a leased gumbel "
+                         "window (counter-addressed, replayable)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
     toks, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                        gen=args.gen)
+                        gen=args.gen, temperature=args.temperature)
     print("generated shape:", toks.shape)
     print({k: round(v, 4) for k, v in stats.items()})
 

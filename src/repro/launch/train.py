@@ -2,7 +2,9 @@
 
 Runs on whatever devices exist (1 CPU here; the same code path jits under
 the production mesh on TPU).  Integrates: ThunderStream-initialized model,
-deterministic ThundeRiNG data pipeline, sharded AdamW, fault-tolerant loop
+deterministic ThundeRiNG data pipeline fed through the BlockService
+delivery layer (leased step windows, double-buffered batch dispatch,
+ledger checkpointed with the model), sharded AdamW, fault-tolerant loop
 with async checkpoints.
 
   PYTHONPATH=src python -m repro.launch.train --arch glm4_9b --smoke \\
@@ -18,13 +20,13 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.data import SyntheticLMPipeline
+from repro.data import LeasedBatchFeeder, SyntheticLMPipeline
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.models.common import ArchConfig
 from repro.optim import adamw_init
-from repro.runtime import FaultTolerantLoop
+from repro.runtime import BlockService, FaultTolerantLoop
 
 SMOKE_OVERRIDES = dict(n_layers=2, d_model=128, d_ff=256, vocab=512,
                        q_chunk=64, loss_chunks=4)
@@ -59,12 +61,27 @@ def pipeline_for(cfg: ArchConfig, global_batch: int, seq_len: int,
 
 def train(cfg: ArchConfig, *, steps: int, global_batch: int, seq_len: int,
           ckpt_dir: str, seed: int = 0, save_every: int = 50,
-          fail_at=None, log_every: int = 10, compress=None):
+          fail_at=None, log_every: int = 10, compress=None,
+          use_service: bool = True):
+    """Train ``steps`` steps; returns (params, opt_state, logged losses).
+
+    ``use_service=True`` (default) feeds batches through the
+    ``BlockService`` delivery layer: one leased step window per batch,
+    batch ``s+1`` dispatched by a producer thread while step ``s``
+    computes, and the lease ledger saved/restored with every checkpoint
+    (exact mid-epoch resume, double-spend structurally rejected).
+    ``use_service=False`` keeps the historical path that fuses
+    ``batch_at`` into the jitted step — the batch bits and losses are
+    BIT-IDENTICAL either way (the batch function is the same pure
+    function of (seed, step); see tests/test_blocks.py).
+    """
     model = registry.build(cfg)
     pipe = pipeline_for(cfg, global_batch, seq_len, seed)
     train_step = steps_mod.make_train_step(model, seed=seed,
                                            total_steps=max(steps, 2),
                                            compress=compress)
+
+    jit_step = jax.jit(train_step)
 
     @jax.jit
     def fused_step(params, opt_state, step):
@@ -73,6 +90,26 @@ def train(cfg: ArchConfig, *, steps: int, global_batch: int, seq_len: int,
 
     mgr = CheckpointManager(ckpt_dir, async_save=True)
     loop = FaultTolerantLoop(mgr, save_every=save_every)
+
+    service = feeder = None
+    extra_state = on_restore = None
+    if use_service:
+        service = BlockService(seed)
+        feeder = LeasedBatchFeeder(pipe, service)
+
+        def step_fn(p, o, s):
+            batch = feeder.batch_for(s)
+            return jit_step(p, o, batch, jnp.int32(s))
+
+        def extra_state():
+            return {"rng_ledger": service.ledger_state()}
+
+        def on_restore(extra, start):
+            feeder.reset()
+            service.restore_ledger((extra or {}).get("rng_ledger"))
+    else:
+        def step_fn(p, o, s):
+            return fused_step(p, o, jnp.int32(s))
 
     def init_state():
         params, _ = model.init(seed)
@@ -87,10 +124,14 @@ def train(cfg: ArchConfig, *, steps: int, global_batch: int, seq_len: int,
             print(f"step {step:5d} loss {loss:.4f}", flush=True)
 
     t0 = time.time()
-    params, opt_state = loop.run(
-        init_state=init_state,
-        step_fn=lambda p, o, s: fused_step(p, o, jnp.int32(s)),
-        num_steps=steps, fail_at=fail_at, on_metrics=on_metrics)
+    try:
+        params, opt_state = loop.run(
+            init_state=init_state, step_fn=step_fn,
+            num_steps=steps, fail_at=fail_at, on_metrics=on_metrics,
+            extra_state=extra_state, on_restore=on_restore)
+    finally:
+        if feeder is not None:
+            feeder.reset()
     dt = time.time() - t0
     tokens = steps * global_batch * seq_len
     print(f"done: {steps} steps, {tokens} tokens, {dt:.1f}s "
@@ -110,6 +151,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--compress", default=None, choices=[None, "bf16"])
+    ap.add_argument("--no-service", action="store_true",
+                    help="legacy path: fuse batch_at into the jitted step "
+                         "instead of the BlockService delivery layer")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -117,7 +161,8 @@ def main():
         cfg = smoke_config(cfg)
     train(cfg, steps=args.steps, global_batch=args.global_batch,
           seq_len=args.seq_len, ckpt_dir=args.ckpt_dir, seed=args.seed,
-          save_every=args.save_every, compress=args.compress)
+          save_every=args.save_every, compress=args.compress,
+          use_service=not args.no_service)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,6 @@
+from repro.runtime.blocks import (BlockProducer, BlockService, Lease,
+                                  LeaseError)
 from repro.runtime.fault import FaultTolerantLoop, SimulatedFailure
 
-__all__ = ["FaultTolerantLoop", "SimulatedFailure"]
+__all__ = ["BlockProducer", "BlockService", "FaultTolerantLoop", "Lease",
+           "LeaseError", "SimulatedFailure"]

@@ -1,0 +1,571 @@
+"""Block delivery: leased counter windows + double-buffered producers.
+
+The paper's deployment story is not "call the generator" — it is a
+standing producer streaming decorrelated blocks through on-chip FIFOs
+into application kernels, while SOU instances scale with zero extra
+root hardware.  ``BlockService`` is the software analogue of that
+delivery layer, sitting ABOVE the engine:
+
+  * **Counter-window leases.**  Every consumer (data pipeline, dropout,
+    MC apps, serving sampler) names a *channel* (one MISRN family of the
+    service seed) and receives disjoint, checkpointable
+    ``(ctr_lo, ctr_hi)`` windows of its counter space.  Double-spending
+    randomness becomes structurally impossible — an overlapping lease
+    raises ``LeaseError`` — instead of a calling convention.
+  * **A two-phase ledger.**  ``lease()`` *reserves* a window (in-memory
+    only); ``commit()`` moves it into the durable ledger.
+    ``ledger_state()`` snapshots committed windows only, so a snapshot
+    taken mid-run describes exactly the randomness consumed so far;
+    ``restore_ledger()`` rewinds to a snapshot (dropping reservations),
+    after which re-leasing replays the SAME windows — bit-identical
+    resume falls out of the accounting.
+  * **Double-buffered generation.**  ``producer()`` runs a daemon thread
+    that leases window ``k+1`` and *dispatches* its generation while the
+    consumer still holds block ``k`` — JAX's async dispatch makes the
+    handoff ``block_until_ready``-free: the thread enqueues device work
+    and puts the (not yet materialized) array in a depth-bounded queue,
+    the software analogue of the paper's FIFO into the application.
+
+Generation itself is one jitted window function per (channel, length,
+sampler) with a TRACED counter, so successive leases of equal length
+re-use one executable (no per-window retrace), and the service's mesh —
+including the 2-D ``(hosts, streams)`` fan-out of
+``engine.generate_sharded`` — rides inside the jit.
+
+Layering: ``runtime`` sits above ``core`` and ``kernels``; nothing in
+``core``/``kernels`` imports this module.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import hashlib
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, stream as tstream, u64
+
+_M64 = (1 << 64) - 1
+
+
+class LeaseError(ValueError):
+    """A lease request overlaps randomness that is already spoken for."""
+
+
+def channel_purpose(name: str) -> int:
+    """Deterministic 64-bit purpose tag for a channel name (stable across
+    processes — the ledger must mean the same windows after a restart)."""
+    return int.from_bytes(
+        hashlib.blake2s(name.encode(), digest_size=8).digest(), "little")
+
+
+# ---------------------------------------------------------------------------
+# Lease + ledger
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """One disjoint counter window ``[lo, hi)`` of a channel.
+
+    Units are whatever the channel's window function counts: engine
+    plan channels count counter steps along the T axis (x ``num_streams``
+    elements per step); the data-pipeline channel counts optimizer steps.
+    """
+    channel: str
+    lo: int
+    hi: int
+    service: "BlockService" = dataclasses.field(repr=False, compare=False)
+
+    @property
+    def length(self) -> int:
+        return self.hi - self.lo
+
+    def plan(self, **overrides) -> engine.GenPlan:
+        """The engine plan for this window (plan channels only)."""
+        return self.service.plan_for(self, **overrides)
+
+    def stream(self, column: int = 0) -> tstream.ThunderStream:
+        """ThunderStream for one column of the window, advanced to ``lo``.
+
+        Bit-parity with the bulk block is the engine's shared-derivation
+        guarantee: ``random_bits(lease.stream(s), (L,))`` equals column
+        ``s`` of ``service.generate(lease)`` for a bits channel.
+        """
+        return self.service.stream_for(self, column)
+
+    def commit(self) -> None:
+        self.service.commit(self)
+
+    def release(self) -> None:
+        self.service.release(self)
+
+
+class _Ledger:
+    """Disjoint-interval bookkeeping for one channel.
+
+    ``committed`` is a sorted list of disjoint ``[lo, hi)`` windows
+    (adjacent windows merge); ``reserved`` holds in-flight leases.  The
+    sequential high-water ``next`` is ``max(floor, every hi)`` so plain
+    ``lease(n)`` calls hand out consecutive windows.
+    """
+
+    def __init__(self) -> None:
+        self.committed: List[Tuple[int, int]] = []
+        self.reserved: List[Tuple[int, int]] = []
+        self.floor = 0
+
+    @property
+    def next(self) -> int:
+        hi = self.floor
+        if self.committed:
+            hi = max(hi, self.committed[-1][1])
+        for _, h in self.reserved:
+            hi = max(hi, h)
+        return hi
+
+    def _overlaps(self, lo: int, hi: int) -> Optional[Tuple[int, int]]:
+        i = bisect.bisect_left(self.committed, (lo, lo)) - 1
+        for j in (i, i + 1):
+            if 0 <= j < len(self.committed):
+                clo, chi = self.committed[j]
+                if clo < hi and lo < chi:
+                    return (clo, chi)
+        for rlo, rhi in self.reserved:
+            if rlo < hi and lo < rhi:
+                return (rlo, rhi)
+        return None
+
+    def reserve(self, lo: int, hi: int) -> None:
+        clash = self._overlaps(lo, hi)
+        if clash is not None:
+            raise LeaseError(
+                f"window [{lo}, {hi}) overlaps existing lease "
+                f"[{clash[0]}, {clash[1]})")
+        self.reserved.append((lo, hi))
+
+    def commit(self, lo: int, hi: int) -> None:
+        try:
+            self.reserved.remove((lo, hi))
+        except ValueError:
+            raise LeaseError(f"window [{lo}, {hi}) is not reserved")
+        bisect.insort(self.committed, (lo, hi))
+        # merge touching neighbours (overlap is impossible by reserve())
+        merged: List[Tuple[int, int]] = []
+        for w in self.committed:
+            if merged and merged[-1][1] >= w[0]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], w[1]))
+            else:
+                merged.append(w)
+        self.committed = merged
+
+    def release(self, lo: int, hi: int) -> None:
+        try:
+            self.reserved.remove((lo, hi))
+        except ValueError:
+            raise LeaseError(f"window [{lo}, {hi}) is not reserved")
+
+    def state(self) -> Dict[str, Any]:
+        return {"committed": [[lo, hi] for lo, hi in self.committed],
+                "floor": self.floor}
+
+    @classmethod
+    def from_state(cls, state: Dict[str, Any]) -> "_Ledger":
+        led = cls()
+        led.committed = sorted((int(lo), int(hi))
+                               for lo, hi in state.get("committed", []))
+        led.floor = int(state.get("floor", 0))
+        return led
+
+
+# ---------------------------------------------------------------------------
+# Channels
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Channel:
+    """One named consumer of the service's MISRN space.
+
+    A *plan channel* (``window_fn is None``) generates ``(L, S)`` engine
+    blocks for each leased window; a *custom channel* delegates to
+    ``window_fn(lo, hi)`` (e.g. the data pipeline's batch function) and
+    uses the ledger for accounting only.
+    """
+    name: str
+    purpose: int
+    num_streams: int = 1
+    mode: str = "ctr"
+    deco: str = "splitmix64"
+    sampler: str = "bits"
+    out_dtype: str = "float32"
+    window_fn: Optional[Callable[[int, int], Any]] = None
+
+
+class BlockService:
+    """Leased-window block delivery over one seed's MISRN stream space.
+
+    ``mesh``/``axis_names`` route every plan-channel window through
+    ``engine.generate_sharded`` — 1-D or the 2-D ``(hosts, streams)``
+    fan-out — with the root state replicated and zero collectives, so
+    adding devices to the service is the paper's "add SOU instances"
+    move.  Without a mesh, plans go through ``engine.generate`` with the
+    service's backend override (auto-selected when None).
+    """
+
+    def __init__(self, seed: int = 0, *,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 axis_names: Optional[Tuple[str, ...]] = None,
+                 backend: Optional[str] = None,
+                 block_t: int = engine.DEFAULT_BLOCK_T,
+                 block_s: int = engine.DEFAULT_BLOCK_S):
+        self.seed = seed
+        self.mesh = mesh
+        self.axis_names = (tuple(axis_names) if axis_names is not None
+                           else (tuple(mesh.axis_names) if mesh is not None
+                                 else None))
+        self.backend = backend
+        self.block_t = block_t
+        self.block_s = block_s
+        self._channels: Dict[str, Channel] = {}
+        self._ledgers: Dict[str, _Ledger] = {}
+        self._window_fns: Dict[Tuple, Callable] = {}
+        self._lock = threading.Lock()
+
+    # -- channels ----------------------------------------------------------
+
+    def open(self, name: str, *, num_streams: int = 1,
+             purpose: Optional[int] = None, mode: str = "ctr",
+             deco: str = "splitmix64", sampler: str = "bits",
+             out_dtype: str = "float32",
+             window_fn: Optional[Callable[[int, int], Any]] = None
+             ) -> Channel:
+        """Open (or return the already-open) channel ``name``."""
+        with self._lock:
+            if name in self._channels:
+                return self._channels[name]
+            ch = Channel(name=name,
+                         purpose=(channel_purpose(name) if purpose is None
+                                  else purpose),
+                         num_streams=num_streams, mode=mode, deco=deco,
+                         sampler=sampler, out_dtype=out_dtype,
+                         window_fn=window_fn)
+            self._channels[name] = ch
+            self._ledgers.setdefault(name, _Ledger())
+            return ch
+
+    def channel(self, name: str) -> Channel:
+        return self._channels[name]
+
+    # -- leases ------------------------------------------------------------
+
+    def lease(self, name: str, length: int, *,
+              at: Optional[int] = None) -> Lease:
+        """Reserve the next (or an explicit) disjoint window of a channel.
+
+        ``at=None`` takes ``length`` units at the channel's high-water
+        mark; an explicit ``at`` claims ``[at, at + length)`` and raises
+        ``LeaseError`` if ANY part of it is already reserved or
+        committed.
+        """
+        if length <= 0:
+            raise ValueError(f"lease length must be positive, got {length}")
+        if name not in self._channels:
+            raise KeyError(f"channel {name!r} is not open; "
+                           f"have {sorted(self._channels)}")
+        with self._lock:
+            led = self._ledgers[name]
+            lo = led.next if at is None else int(at)
+            hi = lo + length
+            if hi > _M64:
+                raise LeaseError(f"window [{lo}, {hi}) exceeds the u64 "
+                                 f"counter space")
+            led.reserve(lo, hi)
+        return Lease(channel=name, lo=lo, hi=hi, service=self)
+
+    def commit(self, lease: Lease) -> None:
+        """Move a reserved window into the durable (checkpointable) ledger."""
+        with self._lock:
+            self._ledgers[lease.channel].commit(lease.lo, lease.hi)
+
+    def release(self, lease: Lease) -> None:
+        """Drop an unconsumed reservation (its window may be re-leased)."""
+        with self._lock:
+            self._ledgers[lease.channel].release(lease.lo, lease.hi)
+
+    # -- ledger checkpointing ---------------------------------------------
+
+    def ledger_state(self) -> Dict[str, Any]:
+        """JSON-able snapshot of COMMITTED windows per channel.
+
+        Reservations are deliberately excluded: a snapshot describes the
+        randomness actually handed to consumers, so restoring it and
+        re-leasing replays in-flight windows bit-identically.
+        """
+        with self._lock:
+            return {"channels": {name: led.state()
+                                 for name, led in self._ledgers.items()}}
+
+    def restore_ledger(self, state: Optional[Dict[str, Any]]) -> None:
+        """Rewind the ledger to a snapshot (or clear it with ``None``/{}).
+
+        All reservations vanish — producers running at snapshot-restore
+        time must be closed first (``BlockProducer.close``).
+        """
+        chans = (state or {}).get("channels", {})
+        with self._lock:
+            self._ledgers = {name: _Ledger.from_state(s)
+                             for name, s in chans.items()}
+            for name in self._channels:
+                self._ledgers.setdefault(name, _Ledger())
+
+    # -- generation --------------------------------------------------------
+
+    def plan_for(self, lease: Lease, *, sampler: Optional[str] = None,
+                 out_dtype: Optional[str] = None) -> engine.GenPlan:
+        """Static-offset engine plan for a leased window (plan channels)."""
+        ch = self._channels[lease.channel]
+        if ch.window_fn is not None:
+            raise ValueError(f"channel {lease.channel!r} has a custom "
+                             f"window_fn; it has no engine plan")
+        return engine.make_plan(
+            seed=self.seed, num_streams=ch.num_streams,
+            num_steps=lease.length, offset=lease.lo, purpose=ch.purpose,
+            mode=ch.mode, deco=ch.deco,
+            sampler=ch.sampler if sampler is None else sampler,
+            out_dtype=ch.out_dtype if out_dtype is None else out_dtype)
+
+    def stream_for(self, lease: Lease, column: int = 0
+                   ) -> tstream.ThunderStream:
+        ch = self._channels[lease.channel]
+        fam = tstream.new_stream(self.seed, ch.purpose)
+        return tstream.advance(tstream.derive(fam, column), lease.lo)
+
+    def _window_fn(self, ch: Channel, length: int, sampler: str,
+                   out_dtype: str) -> Callable:
+        """One jitted fn(ctr_hi, ctr_lo) -> (length, S) block per shape.
+
+        The counter is TRACED (plan.offset=None), so every equal-length
+        lease of a channel reuses one executable; traced and static
+        counters are bit-identical by the engine's parity tests.
+        """
+        key = (ch.name, length, sampler, out_dtype)
+        fn = self._window_fns.get(key)
+        if fn is not None:
+            return fn
+        x0, h_fam = engine.family_from_seed(self.seed, ch.purpose)
+        h = engine.leaf_table(h_fam, ch.num_streams)
+        mesh, axes, backend = self.mesh, self.axis_names, self.backend
+        block_t, block_s = self.block_t, self.block_s
+        mode, deco = ch.mode, ch.deco
+
+        @jax.jit
+        def window(ctr_hi, ctr_lo):
+            plan = engine.GenPlan(
+                x0=x0, h=h, num_steps=length, ctr=(ctr_hi, ctr_lo),
+                offset=None, mode=mode, deco=deco, sampler=sampler,
+                out_dtype=out_dtype)
+            if mesh is not None:
+                return engine.generate_sharded(
+                    plan, mesh=mesh, axis_names=axes, backend=backend,
+                    block_t=block_t, block_s=block_s)
+            return engine.generate(plan, backend=backend, block_t=block_t,
+                                   block_s=block_s)
+
+        self._window_fns[key] = window
+        return window
+
+    def generate(self, lease: Lease, *, sampler: Optional[str] = None,
+                 out_dtype: Optional[str] = None) -> Any:
+        """The block for a leased window (dispatched, not waited on).
+
+        Plan channels return the ``(length, S)`` engine block with the
+        channel's (or overridden) sampler stage; custom channels return
+        ``window_fn(lo, hi)``.
+        """
+        ch = self._channels[lease.channel]
+        if ch.window_fn is not None:
+            return ch.window_fn(lease.lo, lease.hi)
+        s = ch.sampler if sampler is None else sampler
+        d = ch.out_dtype if out_dtype is None else out_dtype
+        fn = self._window_fn(ch, lease.length, s, d)
+        c_hi, c_lo = (u64.to_u32(v) for v in u64.const64(lease.lo))
+        return fn(jnp.asarray(c_hi), jnp.asarray(c_lo))
+
+    def take(self, name: str, length: int, **kw) -> Any:
+        """lease + generate + commit in one call (synchronous consumers)."""
+        lease = self.lease(name, length)
+        try:
+            block = self.generate(lease, **kw)
+        except Exception:
+            self.release(lease)
+            raise
+        self.commit(lease)
+        return block
+
+    def producer(self, name: str, block_len: int, *, depth: int = 1,
+                 count: Optional[int] = None, start: Optional[int] = None,
+                 **gen_kw) -> "BlockProducer":
+        """Double-buffered producer over successive leased windows.
+
+        ``start`` pins the first window to ``[start, start + block_len)``
+        (explicit ``at=`` leases) — the repositioning hook for resume:
+        windows already committed beyond ``start`` raise ``LeaseError``
+        unless the ledger was rewound first.
+        """
+        return BlockProducer(self, name, block_len, depth=depth,
+                             count=count, start=start, **gen_kw)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered producer
+# ---------------------------------------------------------------------------
+
+class BlockProducer:
+    """Standing producer thread: block ``k+1`` is leased and dispatched
+    while the consumer holds block ``k`` (the paper's FIFO-into-
+    application pipeline).
+
+    The queue holds (lease, block) pairs where ``block`` is a live jax
+    array whose computation was *dispatched* by the producer thread —
+    never waited on (``block_until_ready``-free handoff); the consumer's
+    own ops simply enqueue behind it.  Iterating yields the block and
+    COMMITS its lease (consumed randomness enters the durable ledger at
+    handoff, so a ledger snapshot between iterations is exact).
+    """
+
+    def __init__(self, service: BlockService, name: str, block_len: int, *,
+                 depth: int = 1, count: Optional[int] = None,
+                 start: Optional[int] = None, **gen_kw):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._service = service
+        self._name = name
+        self._block_len = block_len
+        self._count = count
+        self._pos = start
+        self._gen_kw = gen_kw
+        self._queue: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._produced = 0
+        self._thread = threading.Thread(
+            target=self._work, name=f"blocks:{name}", daemon=True)
+        self._thread.start()
+
+    def _work(self) -> None:
+        try:
+            while not self._stop.is_set():
+                if self._count is not None and self._produced >= self._count:
+                    break
+                lease = self._service.lease(self._name, self._block_len,
+                                            at=self._pos)
+                if self._pos is not None:
+                    self._pos += self._block_len
+                try:
+                    block = self._service.generate(lease, **self._gen_kw)
+                except BaseException:
+                    self._service.release(lease)
+                    raise
+                self._produced += 1
+                while not self._stop.is_set():
+                    try:
+                        self._queue.put((lease, block), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                else:
+                    self._service.release(lease)
+        except BaseException as e:  # surface in the consumer thread
+            self._error = e
+        finally:
+            while not self._stop.is_set():
+                try:
+                    self._queue.put(None, timeout=0.1)  # end-of-stream
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> "BlockProducer":
+        return self
+
+    def __next__(self) -> Tuple[Lease, Any]:
+        while True:
+            if self._error is not None and self._queue.empty():
+                err, self._error = self._error, None
+                raise err
+            try:
+                item = self._queue.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if item is None:
+                if self._error is not None:
+                    err, self._error = self._error, None
+                    raise err
+                raise StopIteration
+            lease, block = item
+            self._service.commit(lease)
+            return lease, block
+
+    def close(self) -> None:
+        """Stop the thread and release every unconsumed reservation."""
+        self._stop.set()
+        self._thread.join(timeout=10.0)
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None:
+                self._service.release(item[0])
+
+    def __enter__(self) -> "BlockProducer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Leased Monte-Carlo app entry points (paper Sec. 6 consumers)
+# ---------------------------------------------------------------------------
+
+def _leased_app(service: BlockService, channel: str, num_streams: int,
+                length: int, fn: Callable[[Lease], Any]) -> Any:
+    """open + lease + run + commit (release on failure) — the shared
+    lifecycle of every synchronous leased consumer."""
+    service.open(channel, num_streams=num_streams)
+    lease = service.lease(channel, length)
+    try:
+        result = fn(lease)
+    except Exception:
+        service.release(lease)
+        raise
+    service.commit(lease)
+    return result
+
+
+def estimate_pi(service: BlockService, *, num_lanes: int,
+                draws_per_lane: int, **kw) -> Any:
+    """MC pi over a leased draw window: repeated calls consume fresh,
+    disjoint randomness of the service family (window units = draws per
+    lane; the x/y coordinate purposes share the window)."""
+    from repro.kernels import ops
+    return _leased_app(
+        service, "mc/pi", num_lanes, draws_per_lane,
+        lambda lease: ops.estimate_pi(
+            seed=service.seed, num_lanes=num_lanes,
+            draws_per_lane=draws_per_lane, offset=lease.lo, **kw))
+
+
+def price_option(service: BlockService, *, num_lanes: int,
+                 draws_per_lane: int, **kw) -> Any:
+    """Leased-window Black-Scholes MC (see ``estimate_pi``)."""
+    from repro.kernels import ops
+    return _leased_app(
+        service, "mc/option", num_lanes, draws_per_lane,
+        lambda lease: ops.price_option(
+            seed=service.seed, num_lanes=num_lanes,
+            draws_per_lane=draws_per_lane, offset=lease.lo, **kw))

@@ -42,19 +42,30 @@ class FaultTolerantLoop:
 
     def run(self, *, init_state: Callable[[], Any], step_fn, num_steps: int,
             fail_at: Optional[int] = None,
-            on_metrics=None) -> Any:
+            on_metrics=None,
+            extra_state: Optional[Callable[[], Dict[str, Any]]] = None,
+            on_restore: Optional[Callable[[Optional[Dict[str, Any]], int],
+                                          None]] = None) -> Any:
         """Run ``num_steps`` with checkpoint/restart.
 
         ``init_state()`` -> (params, opt_state); ``step_fn(params, opt,
         step)`` -> (params, opt, metrics).  ``fail_at``: inject a
         SimulatedFailure the first time that step is reached (tests).
+
+        ``extra_state()`` -> JSON-able dict saved with every checkpoint
+        (e.g. the BlockService lease ledger); ``on_restore(extra, step)``
+        is called once per (re)start BEFORE stepping — with the restored
+        extra dict, or ``None`` on a from-scratch start — so runtime
+        state outside (params, opt) rewinds with the model.
         """
         restarts = 0
         failed_once = False
         while True:
             try:
-                state, start = self._restore_or_init(init_state)
+                state, start, extra = self._restore_or_init(init_state)
                 params, opt_state = state
+                if on_restore is not None:
+                    on_restore(extra, start)
                 for step in range(start, num_steps):
                     if fail_at is not None and step == fail_at \
                             and not failed_once:
@@ -67,7 +78,9 @@ class FaultTolerantLoop:
                     done = step + 1
                     if done % self.save_every == 0 or done == num_steps:
                         self.ckpt.save(done, {"params": params,
-                                              "opt": _opt_to_tree(opt_state)})
+                                              "opt": _opt_to_tree(opt_state)},
+                                       extra=extra_state() if extra_state
+                                       else None)
                 self.ckpt.wait()
                 return params, opt_state
             except SimulatedFailure:
@@ -79,11 +92,11 @@ class FaultTolerantLoop:
     def _restore_or_init(self, init_state):
         latest = self.ckpt.latest()
         if latest is None:
-            return init_state(), 0
-        tree, step, _ = self.ckpt.restore()
+            return init_state(), 0, None
+        tree, step, extra = self.ckpt.restore()
         params = tree["params"]
         opt_state = _opt_from_tree(tree["opt"])
-        return (params, opt_state), step
+        return (params, opt_state), step, extra
 
 
 def _opt_to_tree(opt_state) -> Dict[str, Any]:

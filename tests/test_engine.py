@@ -165,6 +165,30 @@ def test_generate_sharded_pads_uneven_streams():
                                                           backend="xla")))
 
 
+@pytest.mark.parametrize("mode", ["ctr", "faithful"])
+def test_generate_sharded_2d_axes_bitexact(mode):
+    """2-D (hosts, streams) fan-out on a (1, 1) mesh == plain generate
+    (the real multi-device grid is covered by the 8-device subprocess
+    test in test_blocks.py)."""
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(1, 1),
+                             ("hosts", "streams"))
+    plan = engine.make_plan(seed=17, num_streams=24, num_steps=16, mode=mode)
+    a = np.asarray(engine.generate(plan, backend="xla"))
+    b = np.asarray(engine.generate_sharded(plan, mesh=mesh,
+                                           axis_names=("hosts", "streams")))
+    assert np.array_equal(a, b)
+
+
+def test_generate_sharded_axis_validation():
+    plan = engine.make_plan(seed=17, num_streams=8, num_steps=4)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(1, 1),
+                             ("hosts", "streams"))
+    with pytest.raises(ValueError, match="no axis"):
+        engine.generate_sharded(plan, mesh=mesh, axis_names=("hosts", "bogus"))
+    with pytest.raises(ValueError, match="requires an explicit mesh"):
+        engine.generate_sharded(plan, axis_names=("hosts", "streams"))
+
+
 SHARDED_SUBPROCESS = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
