@@ -1,62 +1,45 @@
-"""Paper Tables 2/3/4 analogue: statistical battery.
+"""Paper Tables 2/3/4 analogue, rebuilt on the ``repro.quality`` subsystem.
 
-Table 2 — intra-stream battery per generator (monobit/chi2/runs/autocorr).
-Table 3 — pairwise Pearson/Spearman/Kendall with technique ablation.
-Table 4 — Hamming-weight dependency with technique ablation.
+Runs the Crush-lite battery at the ``tiny`` profile (seconds on CPU;
+the committed evidence is the ``fast`` profile in QUALITY_report.json)
+and emits one row per generator plus the headline cross-battery
+numbers — the same Table 3/4 ordering the full battery documents:
+
+  Table 2 — intra-stream battery verdict per generator.
+  Table 3 — pairwise correlation sweep with technique ablation.
+  Table 4 — interleaved Hamming-weight dependency with ablation.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import row
-from repro.core import baselines, statistics, stream
-
-N = 8192
-S = 4
-
-
-def _thunder(n_streams, n):
-    s = stream.new_stream(20240513, 0)
-    kids = stream.split(s, n_streams)
-    return np.stack([np.asarray(stream.random_bits(k, (n,))) for k in kids])
 
 
 def run(out):
-    gens = {
-        "thundering": _thunder(S, N),
-        "philox4x32": np.asarray(baselines.philox_bits(1, S, N)),
-        "xoroshiro128ss": np.asarray(baselines.xoroshiro_bits(1, S, N)),
-        "pcg_xsh_rs": np.asarray(baselines.pcg_xsh_rs_bits(1, S, N)),
-    }
-    # Table 2 analogue
-    for name, bits in gens.items():
-        rep = statistics.intra_stream_report(bits[0])
-        ok = (abs(rep["monobit"] - 0.5) < 0.01 and rep["byte_chi2_p"] > 1e-4
-              and abs(rep["runs_z"]) < 4)
-        out(row(f"quality/intra/{name}", 0.0,
-                f"monobit={rep['monobit']:.4f} chi2_p={rep['byte_chi2_p']:.3f}"
-                f" runs_z={rep['runs_z']:.2f} lag1={rep['lag1_autocorr']:.4f}"
-                f" pass={ok}"))
-    # Table 3 analogue: ablation of pairwise correlation
-    ablations = {
-        "lcg_baseline": np.asarray(baselines.raw_lcg_bits(42, S, N)),
-        "lcg_permutation": np.asarray(
-            baselines.raw_lcg_bits(42, S, N, permute=True, h_mode="spread")),
-        "thundering": gens["thundering"],
-    }
-    for name, bits in ablations.items():
-        rep = statistics.inter_stream_report(bits)
-        out(row(f"quality/pairwise/{name}", 0.0,
-                f"pearson={rep['max_pearson']:.5f}"
-                f" spearman={rep['max_spearman']:.5f}"
-                f" kendall={rep['max_kendall']:.5f}"))
-    # Table 4 analogue: HWD of interleaved streams
-    hwd_cases = {
-        "lcg_baseline": np.asarray(baselines.raw_lcg_bits(42, S, N)),
-        "lcg_permutation": np.asarray(
-            baselines.raw_lcg_bits(42, S, N, permute=True)),
-        "thundering": gens["thundering"],
-    }
-    for name, bits in hwd_cases.items():
-        hwd = statistics.hamming_weight_dependency(statistics.interleave(bits))
-        out(row(f"quality/hwd/{name}", 0.0, f"hwd={hwd:.5f}"))
+    from repro.quality import run_battery
+
+    report = run_battery("tiny")
+    # Table 2 analogue: per-generator intra-stream battery verdicts
+    for g in report["generators"]:
+        if g["intra"] is None:
+            continue
+        tests = g["intra"]["tests"]
+        worst = min(t.get("p_ks", t.get("p", 1.0)) for t in tests.values())
+        out(row(f"quality/intra/{g['name']}", 0.0,
+                f"ok={g['intra']['ok']} worst_p={worst:.4g} "
+                f"tests={len(tests)}"))
+    # Table 3/4 analogue: the cross-battery ablation ordering
+    for g in report["generators"]:
+        if g["cross"] is None:
+            continue
+        sweep = g["cross"]["tests"]["pairwise_sweep"]
+        hwd = g["cross"]["tests"]["interleaved/hwd"]
+        out(row(f"quality/pairwise/{g['name']}", 0.0,
+                f"max_abs_r={sweep['max_abs_r']:.5f} p={sweep['p']:.3g} "
+                f"ok={sweep['ok']}"))
+        out(row(f"quality/hwd/{g['name']}", 0.0,
+                f"p_ks={hwd['p_ks']:.3g} p_min={hwd['p_min']:.3g} "
+                f"ok={hwd['ok']}"))
+    out(row("quality/battery", 0.0,
+            f"profile=tiny ok={report['ok']} "
+            f"as_expected={sum(g['as_expected'] for g in report['generators'])}"
+            f"/{len(report['generators'])}"))

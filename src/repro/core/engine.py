@@ -128,6 +128,14 @@ class GenPlan:
               "bernoulli(p)".  See ``repro.core.sampler``.
     out_dtype "float32" or "bfloat16" for the float samplers (bits is
               always uint32, bernoulli always bool).
+
+    Example:
+        >>> from repro.core import engine
+        >>> plan = engine.make_plan(seed=7, num_streams=4, num_steps=8)
+        >>> plan.shape                    # (T, S), time-major
+        (8, 4)
+        >>> (plan.mode, plan.deco, plan.sampler)
+        ('ctr', 'splitmix64', 'bits')
     """
     x0: U64Pair
     h: U64Pair
@@ -404,6 +412,17 @@ def generate(plan: GenPlan, *, backend: Optional[str] = None,
     pre-advanced (S, 4) xorshift start states for faithful mode (used by
     ``generate_sharded``, where substream identity follows the GLOBAL
     stream index, not the local shard).
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.core import engine
+        >>> plan = engine.make_plan(seed=7, num_streams=4, num_steps=8)
+        >>> blk = engine.generate(plan, backend="xla")
+        >>> (blk.shape, str(blk.dtype))
+        ((8, 4), 'uint32')
+        >>> oracle = engine.generate(plan, backend="ref")
+        >>> bool(np.array_equal(np.asarray(blk), np.asarray(oracle)))
+        True
     """
     _validate_plan(plan)
     name = backend or select_backend(plan)
@@ -425,6 +444,15 @@ def sample(plan: GenPlan, *, sampler: Optional[str] = None,
     (T, S) window without materializing the uint32 bits on any backend
     that fuses (xla fuses elementwise; pallas applies the transform
     in-VMEM).  ``sampler=None`` keeps the plan's own stage.
+
+    Example:
+        >>> from repro.core import engine
+        >>> plan = engine.make_plan(seed=7, num_streams=4, num_steps=8)
+        >>> u = engine.sample(plan, sampler="uniform")
+        >>> (u.shape, str(u.dtype))
+        ((8, 4), 'float32')
+        >>> bool((u >= 0).all()) and bool((u < 1).all())
+        True
     """
     if sampler is not None or out_dtype is not None:
         plan = dataclasses.replace(
@@ -480,6 +508,15 @@ def generate_sharded(plan: GenPlan, *, mesh: Optional[jax.sharding.Mesh] = None,
 
     S is padded up to a multiple of the total device count and sliced
     back.
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.core import engine
+        >>> plan = engine.make_plan(seed=7, num_streams=6, num_steps=8)
+        >>> out = engine.generate_sharded(plan)   # default mesh (1 CPU here)
+        >>> direct = engine.generate(plan, backend="xla")
+        >>> bool(np.array_equal(np.asarray(out), np.asarray(direct)))
+        True
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P

@@ -41,7 +41,14 @@ from repro.core.u64 import U32
 
 
 class ThunderStream(NamedTuple):
-    """One ThundeRiNG stream. Fields are uint32 scalars (limb pairs)."""
+    """One ThundeRiNG stream. Fields are uint32 scalars (limb pairs).
+
+    Example:
+        >>> from repro.core import stream
+        >>> s = stream.new_stream(0)
+        >>> (str(s.x0_hi.dtype), int(s.ctr_lo))
+        ('uint32', 0)
+    """
     x0_hi: jnp.ndarray
     x0_lo: jnp.ndarray
     h_hi: jnp.ndarray
@@ -51,7 +58,14 @@ class ThunderStream(NamedTuple):
 
 
 def new_stream(seed: int, stream_id: int = 0) -> ThunderStream:
-    """Create the root stream of a family from a python-int seed."""
+    """Create the root stream of a family from a python-int seed.
+
+    Example:
+        >>> from repro.core import stream
+        >>> s = stream.new_stream(42)
+        >>> int(s.ctr_lo)                 # counter starts at 0
+        0
+    """
     # jnp (not numpy) scalars: stream fields are pytree leaves that flow
     # through jit/scan; numpy-scalar host arithmetic would emit overflow
     # warnings (wrapping is intended).
@@ -64,6 +78,15 @@ def derive(stream: ThunderStream, tag) -> ThunderStream:
     """fold_in: child stream with a fresh (even) leaf offset; counter reset.
 
     ``tag`` may be a python int or a traced uint32/int32 scalar.
+
+    Example:
+        >>> from repro.core import stream
+        >>> s = stream.new_stream(42)
+        >>> child = stream.derive(s, 3)
+        >>> int(child.h_lo) != int(s.h_lo)   # fresh leaf offset
+        True
+        >>> int(child.h_lo) % 2              # even (Hull-Dobell condition)
+        0
     """
     if isinstance(tag, int):
         t_hi, t_lo = (u64.to_u32(v) for v in u64.const64(tag))
@@ -76,11 +99,33 @@ def derive(stream: ThunderStream, tag) -> ThunderStream:
 
 
 def split(stream: ThunderStream, num: int) -> Sequence[ThunderStream]:
+    """``num`` independent child streams (jax.random.split analogue).
+
+    Example:
+        >>> from repro.core import stream
+        >>> kids = stream.split(stream.new_stream(1), 3)
+        >>> len(kids)
+        3
+        >>> len({int(k.h_lo) for k in kids})  # distinct leaf offsets
+        3
+    """
     return [derive(stream, i + 0x517CC1B7) for i in range(num)]
 
 
 def advance(stream: ThunderStream, count: int) -> ThunderStream:
-    """Functionally advance the counter by ``count`` elements."""
+    """Functionally advance the counter by ``count`` elements.
+
+    Counter addressing makes advancing equal slicing:
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.core import stream
+        >>> s = stream.new_stream(7)
+        >>> a = stream.random_bits(s, (6,))
+        >>> b = stream.random_bits(stream.advance(s, 2), (4,))
+        >>> bool(np.array_equal(np.asarray(a)[2:], np.asarray(b)))
+        True
+    """
     c_hi, c_lo = u64.add64((stream.ctr_hi, stream.ctr_lo), u64.const64(count))
     return stream._replace(ctr_hi=c_hi, ctr_lo=c_lo)
 
@@ -95,6 +140,12 @@ def random_bits(stream: ThunderStream, shape: Tuple[int, ...]) -> jnp.ndarray:
     Routed through the unified engine as a (N, 1) single-stream plan; the
     backend is auto-selected (XLA elementwise off-TPU — the arithmetic
     this function always compiled to).
+
+    Example:
+        >>> from repro.core import stream
+        >>> bits = stream.random_bits(stream.new_stream(7), (4, 8))
+        >>> (bits.shape, str(bits.dtype))
+        ((4, 8), 'uint32')
     """
     n = int(math.prod(shape)) if shape else 1
     plan = engine.plan_for_stream(stream, n)
@@ -109,6 +160,14 @@ def uniforms(stream: ThunderStream, shape=(), dtype=jnp.float32
     so on TPU the uint32 bits never reach HBM and ``dtype=jnp.bfloat16``
     halves the written bytes.  Element i is the transform of stream
     element ctr + i (same bits as ``random_bits``).
+
+    Example:
+        >>> from repro.core import stream
+        >>> u = stream.uniforms(stream.new_stream(7), (16,))
+        >>> (u.shape, str(u.dtype))
+        ((16,), 'float32')
+        >>> bool((u >= 0).all()) and bool((u < 1).all())
+        True
     """
     n = int(math.prod(shape)) if shape else 1
     plan = engine.plan_for_stream(stream, n, sampler="uniform",
@@ -122,6 +181,12 @@ def normals(stream: ThunderStream, shape=(), dtype=jnp.float32
 
     Pairs counter-adjacent elements (2k, 2k+1); for odd sample counts one
     extra element is generated and dropped (the pair tail).
+
+    Example:
+        >>> from repro.core import stream
+        >>> z = stream.normals(stream.new_stream(7), (5,))   # odd N is fine
+        >>> (z.shape, str(z.dtype))
+        ((5,), 'float32')
     """
     n = int(math.prod(shape)) if shape else 1
     n_even = n + (n & 1)
@@ -132,13 +197,27 @@ def normals(stream: ThunderStream, shape=(), dtype=jnp.float32
 
 def uniform(stream: ThunderStream, shape=(), dtype=jnp.float32,
             minval=0.0, maxval=1.0) -> jnp.ndarray:
-    """U[minval, maxval) floats built from the top 24 bits."""
+    """U[minval, maxval) floats built from the top 24 bits.
+
+    Example:
+        >>> from repro.core import stream
+        >>> u = stream.uniform(stream.new_stream(7), (8,), minval=2., maxval=3.)
+        >>> bool((u >= 2).all()) and bool((u < 3).all())
+        True
+    """
     u = uniforms(stream, shape, jnp.float32)
     return (minval + u * (maxval - minval)).astype(dtype)
 
 
 def normal(stream: ThunderStream, shape=(), dtype=jnp.float32) -> jnp.ndarray:
-    """Standard normal via inverse-erf of U(-1, 1) (jax.random's method)."""
+    """Standard normal via inverse-erf of U(-1, 1) (jax.random's method).
+
+    Example:
+        >>> from repro.core import stream
+        >>> z = stream.normal(stream.new_stream(7), (4,))
+        >>> (z.shape, str(z.dtype))
+        ((4,), 'float32')
+    """
     u = uniform(stream, shape, jnp.float32, -1.0, 1.0)
     # keep strictly inside (-1, 1)
     tiny = jnp.float32(1e-7)
@@ -154,6 +233,12 @@ def bernoulli(stream: ThunderStream, p, shape=()) -> jnp.ndarray:
     for p near 1), with p <= 0 / p >= 1 short-circuiting to constant
     masks.  A traced ``p`` is clamped to [0, 1] and converted at float32
     precision, with the endpoints still exact.
+
+    Example:
+        >>> from repro.core import stream
+        >>> m = stream.bernoulli(stream.new_stream(3), 1.0, (4,))
+        >>> (str(m.dtype), [bool(v) for v in m])
+        ('bool', [True, True, True, True])
     """
     if isinstance(p, (bool, int, float)):
         n = int(math.prod(shape)) if shape else 1
@@ -170,6 +255,14 @@ def bernoulli(stream: ThunderStream, p, shape=()) -> jnp.ndarray:
 
 
 def gumbel(stream: ThunderStream, shape=(), dtype=jnp.float32) -> jnp.ndarray:
+    """Standard Gumbel samples (for gumbel-max categorical sampling).
+
+    Example:
+        >>> from repro.core import stream
+        >>> g = stream.gumbel(stream.new_stream(7), (8,))
+        >>> (g.shape, str(g.dtype))
+        ((8,), 'float32')
+    """
     u = uniform(stream, shape, jnp.float32)
     tiny = jnp.float32(1e-20)
     return (-jnp.log(-jnp.log(u + tiny) + tiny)).astype(dtype)
@@ -177,6 +270,14 @@ def gumbel(stream: ThunderStream, shape=(), dtype=jnp.float32) -> jnp.ndarray:
 
 def categorical(stream: ThunderStream, logits: jnp.ndarray,
                 axis: int = -1) -> jnp.ndarray:
-    """Gumbel-max sampling along ``axis``."""
+    """Gumbel-max sampling along ``axis``.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> from repro.core import stream
+        >>> logits = jnp.array([[0.0, 100.0, 0.0]])  # one dominant class
+        >>> stream.categorical(stream.new_stream(5), logits).tolist()
+        [1]
+    """
     g = gumbel(stream, logits.shape, logits.dtype)
     return jnp.argmax(logits + g, axis=axis)

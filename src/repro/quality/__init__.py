@@ -1,0 +1,24 @@
+"""repro.quality — the Crush-lite battery as executable documentation.
+
+The paper's headline claim is not throughput alone: ThundeRiNG *passes
+TestU01* while cheap decorrelation keeps unlimited streams independent
+(paper Sec. 6, Tables 2-4).  This package is that claim as a subsystem:
+
+  * ``crush``   — per-block SmallCrush-style tests (birthday spacings,
+    gap, serial, collision, GF(2) matrix rank, spectral, longest-run)
+    with TestU01-style two-level aggregation,
+  * ``cross``   — the inter-stream battery (full pairwise-correlation
+    sweep at S = 2**10 + interleaved-pair sub-battery),
+  * ``battery`` — ``run_battery``: draws through ``engine.generate`` /
+    ``generate_sharded`` / leased ``BlockService`` windows and emits the
+    deterministic ``QUALITY_report.json``,
+  * ``render``  — turns the report into ``docs/quality.md`` and the
+    EXPERIMENTS.md quality section; CI regenerates both and fails on
+    drift, so the documentation cannot detach from measured evidence.
+
+Public surface: ``run_battery`` (and the profile registry ``PROFILES``).
+"""
+from repro.quality.battery import (DEFAULT_SEED, PROFILES, Profile,
+                                   run_battery)
+
+__all__ = ["DEFAULT_SEED", "PROFILES", "Profile", "run_battery"]

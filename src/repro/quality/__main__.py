@@ -1,0 +1,30 @@
+"""``python -m repro.quality`` — run the battery then render the docs.
+
+Equivalent to ``python -m repro.quality.battery`` followed by
+``python -m repro.quality.render`` on the report the battery just wrote
+(kept as one entry point so the report and its rendered documentation
+cannot go out of step; this is what the CI ``docs`` job runs before
+diffing the tree).
+"""
+import argparse
+import sys
+
+from repro.quality import battery, render
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--profile", default="fast",
+                    choices=sorted(battery.PROFILES))
+    ap.add_argument("--seed", type=int, default=battery.DEFAULT_SEED)
+    ap.add_argument("--out", default="QUALITY_report.json")
+    args = ap.parse_args(argv)
+    rc = battery.main(["--profile", args.profile, "--seed", str(args.seed),
+                       "--out", args.out])
+    # render from the report just written — never from a stale default
+    render.main(["--report", args.out])
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -74,6 +74,17 @@ class Lease:
     Units are whatever the channel's window function counts: engine
     plan channels count counter steps along the T axis (x ``num_streams``
     elements per step); the data-pipeline channel counts optimizer steps.
+
+    Example:
+        >>> from repro.runtime.blocks import BlockService
+        >>> svc = BlockService(seed=11)
+        >>> _ = svc.open("docs/demo", num_streams=2)
+        >>> lease = svc.lease("docs/demo", 4)
+        >>> (lease.lo, lease.hi, lease.length)
+        (0, 4, 4)
+        >>> lease.commit()                     # window becomes durable
+        >>> svc.lease("docs/demo", 4).lo       # next window is disjoint
+        4
     """
     channel: str
     lo: int
@@ -213,6 +224,16 @@ class BlockService:
     adding devices to the service is the paper's "add SOU instances"
     move.  Without a mesh, plans go through ``engine.generate`` with the
     service's backend override (auto-selected when None).
+
+    Example:
+        >>> from repro.runtime.blocks import BlockService
+        >>> svc = BlockService(seed=11)
+        >>> _ = svc.open("docs/demo", num_streams=4)
+        >>> blk = svc.take("docs/demo", 8)     # lease + generate + commit
+        >>> (blk.shape, str(blk.dtype))
+        ((8, 4), 'uint32')
+        >>> svc.ledger_state()["channels"]["docs/demo"]["committed"]
+        [[0, 8]]
     """
 
     def __init__(self, seed: int = 0, *,
@@ -434,6 +455,15 @@ class BlockProducer:
     own ops simply enqueue behind it.  Iterating yields the block and
     COMMITS its lease (consumed randomness enters the durable ledger at
     handoff, so a ledger snapshot between iterations is exact).
+
+    Example:
+        >>> from repro.runtime.blocks import BlockService
+        >>> svc = BlockService(seed=11)
+        >>> _ = svc.open("docs/demo", num_streams=2)
+        >>> with svc.producer("docs/demo", 4, count=2) as prod:
+        ...     shapes = [blk.shape for _, blk in prod]
+        >>> shapes
+        [(4, 2), (4, 2)]
     """
 
     def __init__(self, service: BlockService, name: str, block_len: int, *,

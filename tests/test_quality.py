@@ -1,0 +1,196 @@
+"""The Crush-lite battery: calibrated, discriminating, deterministic.
+
+Three properties make the battery trustworthy documentation:
+
+  1. **Calibration** — under a known-good reference generator (numpy's
+     Philox), every first-level test produces uniform p-values (checked
+     by KS) and every counting test's summed statistic sits in the
+     Poisson body.  A miscalibrated test would fail good generators or
+     pass bad ones.
+  2. **Discrimination** — the inter-stream cross-battery rejects the
+     paper's Table 3/4 ablations (shared-root LCG streams without
+     decorrelation) decisively while passing thundering, at sizes far
+     below the committed profile.
+  3. **Determinism** — the committed QUALITY_report.json is a pure
+     function of (profile, seed): its verdicts are asserted here, its
+     canonical serialization round-trips, and the rendered docs match
+     it byte-for-byte (CI additionally regenerates the whole report).
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import statistics as st
+from repro.quality import battery, cross, crush, render
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+N_CAL_BLOCKS = 150
+CAL_WORDS = 1024
+
+
+@pytest.fixture(scope="module")
+def philox_blocks():
+    rng = np.random.Generator(np.random.Philox(0xC0FFEE))
+    return rng.integers(0, 2 ** 32, size=(N_CAL_BLOCKS, CAL_WORDS),
+                        dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# calibration under a known-good reference (numpy Philox)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(crush.CHI2_TESTS))
+def test_chi2_family_pvalues_uniform_under_philox(philox_blocks, name):
+    fn = crush.CHI2_TESTS[name]
+    ps = np.array([fn(b) for b in philox_blocks])
+    assert st.ks_uniform_pvalue(ps) > 1e-3, (
+        f"{name} p-values are not uniform under Philox — the test is "
+        f"miscalibrated")
+    assert 0.25 < ps.mean() < 0.75
+
+
+@pytest.mark.parametrize("name", sorted(crush.POISSON_TESTS))
+def test_poisson_family_calibrated_under_philox(philox_blocks, name):
+    fn = crush.POISSON_TESTS[name]
+    results = [fn(b) for b in philox_blocks]
+    total = sum(c for c, _ in results)
+    lam = sum(l for _, l in results)
+    p = st.poisson_two_sided(total, lam)
+    assert p > 1e-3, (f"{name}: {total} observed vs Poisson({lam:.1f}) — "
+                      f"miscalibrated")
+
+
+def test_intra_battery_passes_on_philox(philox_blocks):
+    """End-to-end two-level aggregation on a known-good (T, S) block."""
+    block = philox_blocks[:32].T.copy()  # (1024, 32)
+    rep = battery.run_intra(block)
+    assert rep["ok"], {n: t for n, t in rep["tests"].items() if not t["ok"]}
+
+
+def test_cross_battery_passes_on_philox():
+    rng = np.random.Generator(np.random.Philox(7))
+    streams = rng.integers(0, 2 ** 32, size=(64, 1024), dtype=np.uint32)
+    rep = cross.run_cross(streams)
+    assert rep["ok"], rep["tests"]
+
+
+# ---------------------------------------------------------------------------
+# discrimination: the paper's Table 3/4 ordering at small size
+# ---------------------------------------------------------------------------
+
+def test_cross_battery_rejects_raw_lcg():
+    blk = battery._ablation_block(777, 512, 64, "raw_lcg")
+    rep = cross.run_cross(np.ascontiguousarray(blk.T))
+    assert not rep["ok"]
+    assert not rep["tests"]["pairwise_sweep"]["ok"]  # Pearson ~1
+
+
+def test_cross_battery_rejects_permutation_only():
+    """Permutation without decorrelation: the sweep alone is not enough —
+    the interleaved HWD detector must reject (paper Table 4's point)."""
+    blk = battery._ablation_block(777, 512, 64, "no_deco")
+    rep = cross.run_cross(np.ascontiguousarray(blk.T))
+    assert not rep["ok"]
+    assert not rep["tests"]["interleaved/hwd"]["ok"]
+
+
+def test_cross_battery_passes_thundering():
+    blk = battery._engine_block(777, 1024, 64, "ctr", "splitmix64", "xla")
+    rep = cross.run_cross(np.ascontiguousarray(blk.T))
+    assert rep["ok"], rep["tests"]
+
+
+def test_matrix_rank_detects_rank_deficiency():
+    """The rank test is the battery's F2-linearity detector (Bakiri et
+    al.): forcing one GF(2)-dependent row per 32x32 matrix (the
+    signature of undecorrelated F2-linear output) must be rejected
+    decisively, while the same words unmodified are fine."""
+    rng = np.random.Generator(np.random.Philox(3))
+    words = rng.integers(0, 2 ** 32, size=2048, dtype=np.uint32)
+    assert crush.matrix_rank(words) > 1e-3
+    mats = words.reshape(-1, 32).copy()
+    mats[:, 31] = mats[:, 0] ^ mats[:, 1]  # every matrix rank <= 31
+    assert crush.matrix_rank(mats.reshape(-1)) < 1e-4
+
+
+def test_gf2_rank32_exact_values():
+    eye = np.uint32(1) << np.arange(32, dtype=np.uint32)
+    assert crush.gf2_rank32(eye) == 32
+    assert crush.gf2_rank32(np.zeros(32, np.uint32)) == 0
+    two = np.zeros(32, np.uint32)
+    two[0], two[1], two[2] = 5, 3, 6  # 6 = 5 ^ 3: dependent third row
+    assert crush.gf2_rank32(two) == 2
+
+
+# ---------------------------------------------------------------------------
+# the committed report: verdicts, coverage, canonical serialization
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def committed_report():
+    with open(REPO / "QUALITY_report.json") as f:
+        return json.load(f)
+
+
+def test_committed_report_is_ok(committed_report):
+    assert committed_report["schema"] == 1
+    assert committed_report["profile"] == "fast"
+    assert committed_report["ok"] is True
+    for g in committed_report["generators"]:
+        assert g["as_expected"], g["name"]
+
+
+def test_committed_report_covers_acceptance_matrix(committed_report):
+    """Both decorrelator modes x all three backends pass; both ablations
+    fail on the cross-battery (the PR's acceptance criterion)."""
+    by_name = {g["name"]: g for g in committed_report["generators"]}
+    for mode in ("ctr", "faithful"):
+        for backend in ("ref", "xla", "pallas"):
+            g = by_name[f"thundering/{mode}/{backend}"]
+            assert g["ok"] and g["intra"]["ok"], g["name"]
+        assert by_name[f"thundering/{mode}/sharded"]["cross"]["ok"]
+    for kind in ("raw_lcg", "no_deco"):
+        g = by_name[f"ablation/{kind}"]
+        assert not g["ok"]
+        rank_fail = (g["intra"] is not None
+                     and not g["intra"]["tests"]["matrix_rank"]["ok"])
+        cross_fail = g["cross"] is not None and not g["cross"]["ok"]
+        assert rank_fail or cross_fail, g["name"]
+
+
+def test_committed_report_serialization_is_canonical(committed_report):
+    """File bytes == report_json(parsed file): no hand edits possible."""
+    on_disk = (REPO / "QUALITY_report.json").read_text()
+    assert battery.report_json(committed_report) == on_disk
+
+
+def test_rendered_docs_match_committed_report(committed_report):
+    assert render.render_quality_md(committed_report) == \
+        (REPO / "docs" / "quality.md").read_text()
+    exp = (REPO / "EXPERIMENTS.md").read_text()
+    assert render.patch_experiments(exp, committed_report) == exp
+
+
+def test_run_battery_rejects_unknown_generator():
+    with pytest.raises(ValueError, match="unknown generators"):
+        battery.run_battery("tiny", generators=["nope"])
+
+
+def test_round_floats_is_stable():
+    r = battery._round_floats({"a": 0.1234567890123456789,
+                               "b": [1e-300, 3], "c": "x"})
+    assert r == {"a": 0.123456789, "b": [1e-300, 3], "c": "x"}
+
+
+# ---------------------------------------------------------------------------
+# full regeneration (slow): the CI docs job's check as a pytest node
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fast_profile_regenerates_byte_identically(committed_report):
+    regen = battery.run_battery("fast", seed=committed_report["seed"])
+    assert battery.report_json(regen) == \
+        (REPO / "QUALITY_report.json").read_text()

@@ -121,6 +121,79 @@ def test_baseline_pcg_xsh_rs_runs():
     assert abs(rep["monobit"] - 0.5) < 0.02
 
 
+# ---------------------------------------------------------------------------
+# edge cases: degenerate inputs must return defined values, not NaN/raise
+# ---------------------------------------------------------------------------
+
+def test_pearson_constant_input_is_zero():
+    const = np.full(64, 0xDEADBEEF, dtype=np.uint32)
+    varying = np.arange(64, dtype=np.uint32) << 24
+    assert statistics.pearson(const, varying) == 0.0
+    assert statistics.pearson(const, const) == 0.0
+    assert np.isfinite(statistics.pearson(const, const))
+
+
+def test_spearman_constant_and_short_input():
+    const = np.full(64, 7, dtype=np.uint32)
+    varying = np.arange(64, dtype=np.uint32)
+    # constant VALUES still rank 0..n-1 under stable argsort-of-argsort
+    # ranking, so only the n < 2 guard applies; it must not raise or NaN
+    assert np.isfinite(statistics.spearman(const, varying))
+    assert statistics.spearman(np.array([1], np.uint32),
+                               np.array([2], np.uint32)) == 0.0
+    assert statistics.spearman(np.array([], np.uint32),
+                               np.array([], np.uint32)) == 0.0
+
+
+def test_kendall_below_two_elements_is_zero():
+    one = np.array([5], dtype=np.uint32)
+    assert statistics.kendall(one, one) == 0.0
+    empty = np.array([], dtype=np.uint32)
+    assert statistics.kendall(empty, empty) == 0.0
+
+
+def test_byte_chi2_short_inputs():
+    assert statistics.byte_chi2_pvalue(np.array([], np.uint32)) == 1.0
+    p = statistics.byte_chi2_pvalue(np.array([1, 2, 3], np.uint32))
+    assert 0.0 < p <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# p-value primitives (promoted for the Crush-lite battery)
+# ---------------------------------------------------------------------------
+
+def test_chi2_sf_known_values():
+    # scipy.stats.chi2.sf reference points
+    assert abs(statistics.chi2_sf(3.841458820694124, 1) - 0.05) < 1e-9
+    assert abs(statistics.chi2_sf(11.0705, 5) - 0.05) < 1e-5
+    assert abs(statistics.chi2_sf(255.0, 255) - 0.4882) < 1e-3
+    assert statistics.chi2_sf(0.0, 10) == 1.0
+    assert statistics.chi2_sf(1e4, 10) < 1e-300 or \
+        statistics.chi2_sf(1e4, 10) >= 0.0
+
+
+def test_normal_sf_known_values():
+    assert abs(statistics.normal_sf(0.0) - 0.5) < 1e-12
+    assert abs(statistics.normal_sf(1.959963985) - 0.025) < 1e-9
+
+
+def test_poisson_tails():
+    # P(X <= 8 | lam=8) ~ 0.5925 (wolfram)
+    assert abs(statistics.poisson_cdf(8, 8.0) - 0.59255) < 1e-4
+    assert statistics.poisson_cdf(-1, 8.0) == 0.0
+    assert statistics.poisson_two_sided(8, 8.0) == 1.0
+    # far tails reject
+    assert statistics.poisson_two_sided(100, 8.0) < 1e-9
+    assert statistics.poisson_two_sided(0, 50.0) < 1e-9
+
+
+def test_ks_uniform_pvalue_calibration():
+    grid = (np.arange(200) + 0.5) / 200.0  # perfectly uniform
+    assert statistics.ks_uniform_pvalue(grid) > 0.99
+    assert statistics.ks_uniform_pvalue(grid ** 4) < 1e-6
+    assert statistics.ks_uniform_pvalue(np.array([])) == 1.0
+
+
 def test_interleave_roundtrip():
     x = np.arange(12, dtype=np.uint32).reshape(3, 4)
     inter = statistics.interleave(x)

@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Markdown link checker (offline): every relative link must resolve.
+
+Usage: python tools/linkcheck.py README.md docs EXPERIMENTS.md ...
+
+Scans the given markdown files (directories are walked for ``*.md``)
+for inline links/images ``[text](target)`` and reference definitions
+``[ref]: target``, and fails if a relative target (optionally with a
+``#fragment``) does not exist on disk relative to the containing file.
+``http(s)``/``mailto`` links are only checked syntactically (no
+network in CI).  Run by the CI ``docs`` job over README/docs/
+EXPERIMENTS/DESIGN so the documentation tree cannot rot silently.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline [text](target) — target up to the first unescaped ')'; skips
+# fenced code blocks and inline code spans below
+_INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_REFDEF = re.compile(r"^\s{0,3}\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_CODE = re.compile(r"`[^`]*`")
+
+
+def iter_md_files(args):
+    for arg in args:
+        p = pathlib.Path(arg)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+        else:
+            raise SystemExit(f"linkcheck: not a markdown file or dir: {p}")
+
+
+def check_file(path: pathlib.Path) -> list:
+    text = _CODE.sub("`code`", _FENCE.sub("```fence```", path.read_text()))
+    errors = []
+    targets = _INLINE.findall(text) + _REFDEF.findall(text)
+    for target in targets:
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            continue  # intra-page anchors: not resolvable without a TOC
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        argv = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md",
+                "docs"]
+    errors = []
+    n = 0
+    for md in iter_md_files(argv):
+        n += 1
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"linkcheck: {n} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
