@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke install-dev
+.PHONY: test test-fast bench bench-smoke install-dev service service-smoke
 
 install-dev:
 	$(PY) -m pip install -e ".[test]"
@@ -17,3 +17,9 @@ bench:             ## full benchmark battery (CSV to stdout)
 
 bench-smoke:       ## CI-sized throughput + sampler smoke (parity, timing, BENCH_throughput.json)
 	$(PY) -m benchmarks.throughput
+
+service:           ## RandService: 1024-tenant burst + replay check, then serve until SIGINT (graceful drain)
+	$(PY) -m repro.service --burst 1024 --tenants 1024 --verify-replay --linger 600
+
+service-smoke:     ## RandService burst bench rows only (service/* in BENCH_throughput.json)
+	$(PY) -m benchmarks.throughput service

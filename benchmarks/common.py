@@ -8,15 +8,36 @@ import jax
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw):
     """Median wall seconds per call of a jitted function."""
-    for _ in range(warmup):
+    return time_fn_stats(fn, *args, iters=iters, warmup=warmup,
+                         **kw)["median_s"]
+
+
+def time_fn_stats(fn, *args, iters: int = 5, warmup: int = 2, **kw):
+    """Timing with the jit warm-up made explicit.
+
+    The FIRST call — trace + compile for a jitted ``fn`` — is timed on
+    its own, the remaining ``warmup - 1`` calls are discarded, and the
+    median of ``iters`` steady-state calls is reported separately, so a
+    smoke row can never mix compile time into ``us_per_call``.  Returns
+    ``{"median_s", "us_per_call", "first_call_us", "compile_us"}``
+    where ``compile_us`` is the first-call excess over steady state
+    (clamped at 0 for non-jitted functions).
+    """
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args, **kw))
+    first = time.perf_counter() - t0
+    for _ in range(max(0, warmup - 1)):
         jax.block_until_ready(fn(*args, **kw))
     times = []
-    for _ in range(iters):
+    for _ in range(max(1, iters)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args, **kw))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    med = times[len(times) // 2]
+    return {"median_s": med, "us_per_call": med * 1e6,
+            "first_call_us": first * 1e6,
+            "compile_us": max(0.0, (first - med) * 1e6)}
 
 
 def row(name: str, us_per_call: float, derived: str) -> str:

@@ -24,6 +24,8 @@ def main() -> None:
          lambda o: throughput.run(o, records=records)),
         ("pipelined",                      # block delivery: FIFO analogue
          lambda o: throughput.pipelined_smoke(o, records=records)),
+        ("service",                        # randomness-as-a-service burst
+         lambda o: throughput.service_smoke(o, records=records)),
         ("comparison", comparison.run),    # Tables 5/6
         ("apps", apps.run),                # Figs 8/9 + Table 7
         ("roofline", roofline.run),        # deliverable (g)

@@ -11,15 +11,20 @@ projected TPU bound (bulk generation writes 4 B/sample; one v5e chip at
 written bytes -> ~410 GSample/s ceiling; the fused-consumer kernels in
 benchmarks/apps.py beat both by never writing the samples).
 
-``run``/``smoke``/``sampler_smoke``/``pipelined_smoke`` also append
-machine-readable row dicts (GSample/s per backend/sampler/dtype/variant)
-that ``run.py`` and ``__main__`` dump to ``BENCH_throughput.json`` — the
-perf trajectory file.  The sampler section times the fused one-pass path
+``run``/``smoke``/``sampler_smoke``/``pipelined_smoke``/``service_smoke``
+also append machine-readable row dicts (GSample/s per
+backend/sampler/dtype/variant; jitted rows carry ``compile_us`` so
+``us_per_call`` is always steady state) that ``run.py`` and ``__main__``
+dump to ``BENCH_throughput.json`` — the perf trajectory file.  The
+sampler section times the fused one-pass path
 (transform applied where the bits are generated) against the historical
 two-pass path (uint32 block materialized by one jitted call, transformed
 by a second), which is the HBM round-trip the sampler stage deletes.
 ``pipelined_smoke`` times the block-delivery layer: double-buffered
 producer vs synchronous lease+generate, and the 1-D vs 2-D mesh rows.
+``service_smoke`` times the randomness-as-a-service layer: a mixed
+multi-tenant burst through the coalescing frontend + standing pool
+(requests/s, p50/p99 latency, coalescing factor).
 """
 from __future__ import annotations
 
@@ -31,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, time_fn, time_fn_stats
 from repro.core import engine, sampler as sampler_mod
 from repro.kernels import ops
 from repro.runtime import BlockService
@@ -83,7 +88,20 @@ def _record(records, **kw):
         records.append(kw)
 
 
-def write_bench_json(records, path: pathlib.Path = BENCH_JSON) -> None:
+def write_bench_json(records, path: pathlib.Path = BENCH_JSON, *,
+                     merge: bool = False) -> None:
+    """Dump the perf-trajectory rows; ``merge=True`` (filtered smoke
+    runs) replaces only the matching (name, variant) rows in an
+    existing file instead of discarding the other sections' rows."""
+    if merge and path.exists():
+        try:
+            old = json.loads(path.read_text()).get("rows", [])
+        except (json.JSONDecodeError, OSError):
+            old = []
+        fresh = {(r.get("name"), r.get("variant")) for r in records}
+        records = [r for r in old
+                   if (r.get("name"), r.get("variant")) not in fresh] \
+                  + list(records)
     path.write_text(json.dumps({
         "schema": "bench_throughput/v1",
         "platform": jax.default_backend(),
@@ -96,9 +114,11 @@ def _sampler_section(out, records, s: int, t: int, iters: int) -> None:
         engine.make_plan(seed=7, num_streams=s, num_steps=t))
     n = s * t
     for sampler, dtype in SAMPLER_CASES:
-        sec_f = time_fn(_fused, s, t, sampler, dtype, backend, iters=iters)
-        sec_2 = time_fn(_two_pass, s, t, sampler, dtype, backend,
-                        iters=iters)
+        st_f = time_fn_stats(_fused, s, t, sampler, dtype, backend,
+                             iters=iters)
+        st_2 = time_fn_stats(_two_pass, s, t, sampler, dtype, backend,
+                             iters=iters)
+        sec_f, sec_2 = st_f["median_s"], st_2["median_s"]
         gs_f, gs_2 = n / sec_f / 1e9, n / sec_2 / 1e9
         speed = sec_2 / sec_f
         tag = f"{sampler}/{dtype}"
@@ -107,12 +127,13 @@ def _sampler_section(out, records, s: int, t: int, iters: int) -> None:
                 f"x{speed:.2f} vs two-pass"))
         _record(records, name=f"sampler/{tag}/S={s}", backend=backend,
                 sampler=sampler, dtype=dtype, variant="fused",
-                num_streams=s, num_steps=t, us_per_call=sec_f * 1e6,
+                num_streams=s, num_steps=t, us_per_call=st_f["us_per_call"],
+                compile_us=st_f["compile_us"],
                 gsamples_per_s=gs_f, speedup_vs_two_pass=speed)
         _record(records, name=f"sampler/{tag}/S={s}", backend=backend,
                 sampler=sampler, dtype=dtype, variant="two_pass",
-                num_streams=s, num_steps=t, us_per_call=sec_2 * 1e6,
-                gsamples_per_s=gs_2)
+                num_streams=s, num_steps=t, us_per_call=st_2["us_per_call"],
+                compile_us=st_2["compile_us"], gsamples_per_s=gs_2)
 
 
 def run(out, records=None):
@@ -161,24 +182,40 @@ def run(out, records=None):
 
 
 def smoke(out=print, records=None) -> None:
-    """CI-sized sanity run: one small block per backend, bit-equal check."""
+    """CI-sized sanity run: one small block per backend, bit-equal check.
+
+    Each path is timed as a JITTED function with the warm-up factored
+    out (``time_fn_stats``): ``us_per_call`` is steady-state dispatch +
+    execution, and trace+compile cost lands in its own ``compile_us``
+    field — an eager first call used to dominate these rows and made
+    them incomparable with the jitted sampler rows.
+    """
     plan = engine.make_plan(seed=7, num_streams=256, num_steps=64)
     base = np.asarray(engine.generate(plan, backend="ref"))
     for backend in ("xla", "pallas"):
-        sec = time_fn(functools.partial(engine.generate, plan,
-                                        backend=backend), iters=1)
-        same = np.array_equal(base, np.asarray(engine.generate(
-            plan, backend=backend)))
-        assert same, f"{backend} disagrees with ref"
-        out(row(f"smoke/{backend}", sec * 1e6, "bit-equal to ref"))
+        fn = jax.jit(functools.partial(engine.generate, plan,
+                                       backend=backend))
+        st = time_fn_stats(fn, iters=3)
+        assert np.array_equal(base, np.asarray(fn())), \
+            f"{backend} disagrees with ref"
+        out(row(f"smoke/{backend}", st["us_per_call"],
+                f"bit-equal to ref, compile {st['compile_us'] / 1e3:.0f}ms"))
         _record(records, name=f"smoke/{backend}", backend=backend,
                 sampler="bits", dtype="uint32", variant="fused",
-                num_streams=256, num_steps=64, us_per_call=sec * 1e6,
-                gsamples_per_s=256 * 64 / sec / 1e9)
-    sec = time_fn(functools.partial(engine.generate_sharded, plan), iters=1)
-    assert np.array_equal(base, np.asarray(engine.generate_sharded(plan)))
-    out(row("smoke/sharded", sec * 1e6,
-            f"bit-equal over {len(jax.devices())} device(s)"))
+                num_streams=256, num_steps=64,
+                us_per_call=st["us_per_call"], compile_us=st["compile_us"],
+                gsamples_per_s=256 * 64 / st["median_s"] / 1e9)
+    fn = jax.jit(functools.partial(engine.generate_sharded, plan))
+    st = time_fn_stats(fn, iters=3)
+    assert np.array_equal(base, np.asarray(fn()))
+    out(row("smoke/sharded", st["us_per_call"],
+            f"bit-equal over {len(jax.devices())} device(s), "
+            f"compile {st['compile_us'] / 1e3:.0f}ms"))
+    _record(records, name="smoke/sharded", backend="sharded",
+            sampler="bits", dtype="uint32", variant="fused",
+            num_streams=256, num_steps=64, us_per_call=st["us_per_call"],
+            compile_us=st["compile_us"],
+            gsamples_per_s=256 * 64 / st["median_s"] / 1e9)
 
 
 def sampler_smoke(out=print, records=None) -> None:
@@ -279,21 +316,85 @@ def pipelined_smoke(out=print, records=None, *, s: int = 512, t: int = 2048,
         fn = jax.jit(functools.partial(engine.generate_sharded, plan,
                                        mesh=mesh, axis_names=axes))
         assert np.array_equal(base, np.asarray(fn())), name
-        sec = time_fn(fn, iters=2)
-        gs = s * t / sec / 1e9
-        out(row(f"pipelined/{name}/S={s}", sec * 1e6,
+        st = time_fn_stats(fn, iters=2)
+        gs = s * t / st["median_s"] / 1e9
+        out(row(f"pipelined/{name}/S={s}", st["us_per_call"],
                 f"{gs:.3f} GSample/s over {mesh.devices.size} device(s) "
                 f"axes={'x'.join(axes)}"))
         _record(records, name=f"pipelined/{name}/S={s}", backend="sharded",
                 sampler="bits", dtype="uint32", variant=name,
-                num_streams=s, num_steps=t, us_per_call=sec * 1e6,
-                gsamples_per_s=gs)
+                num_streams=s, num_steps=t, us_per_call=st["us_per_call"],
+                compile_us=st["compile_us"], gsamples_per_s=gs)
+
+
+def service_smoke(out=print, records=None, *, burst: int = 192,
+                  tenants: int = 64) -> None:
+    """RandService serving rows: requests/s, p50/p99 latency, coalescing.
+
+    A first (untimed) burst traces/compiles the fused window functions
+    and fills the standing pool; the timed burst re-runs the same shape
+    mix against fresh counter windows, so the row is steady-state
+    serving cost (the warm-up wall time is reported as ``compile_us``).
+    """
+    import time as _time
+
+    from repro.service import RandServer, ServerConfig
+    from repro.service.audit import verify_ledger_disjoint
+    from repro.service.burst import make_requests, run_burst
+
+    srv = RandServer(seed=29, config=ServerConfig(
+        max_batch=64, max_delay_s=0.05,
+        hot_classes=(("uniform", "float32"),)))
+    reqs = make_requests(burst=burst, tenants=tenants, seed=1)
+    t0 = _time.perf_counter()
+    run_burst(srv, reqs)                       # warm-up: trace + compile
+    warm_s = _time.perf_counter() - t0
+    srv.reset_metrics()
+    t0 = _time.perf_counter()
+    got = run_burst(srv, reqs)                 # fresh windows, cached fns
+    wall = _time.perf_counter() - t0
+    assert len(got) == burst
+    stats = srv.stats()
+    verify_ledger_disjoint(srv.block_service)
+    srv.shutdown()
+    rps = burst / wall
+    out(row(f"service/burst={burst}", wall / burst * 1e6,
+            f"{rps:.0f} req/s p50={stats['latency_p50_ms']:.1f}ms "
+            f"p99={stats['latency_p99_ms']:.1f}ms "
+            f"{stats['calls_per_request']:.3f} calls/req "
+            f"(x{stats['coalescing_factor']:.0f} coalescing)"))
+    _record(records, name=f"service/burst={burst}", backend="service",
+            sampler="mixed", dtype="mixed", variant="coalesced+pool",
+            num_streams=tenants, num_steps=burst,
+            us_per_call=wall / burst * 1e6, compile_us=warm_s * 1e6,
+            requests_per_s=rps,
+            latency_p50_ms=stats["latency_p50_ms"],
+            latency_p99_ms=stats["latency_p99_ms"],
+            calls_per_request=stats["calls_per_request"],
+            coalescing_factor=stats["coalescing_factor"],
+            fill_ratio=stats["fill_ratio"])
+
+
+SMOKES = {
+    "smoke": smoke,
+    "sampler": sampler_smoke,
+    "pipelined": pipelined_smoke,
+    "service": service_smoke,
+}
 
 
 if __name__ == "__main__":
+    import sys
+    only = sys.argv[1:]
+    unknown = set(only) - set(SMOKES)
+    if unknown:
+        raise SystemExit(f"unknown smoke(s) {sorted(unknown)}; "
+                         f"have {sorted(SMOKES)}")
     records = []
-    smoke(records=records)
-    sampler_smoke(records=records)
-    pipelined_smoke(records=records)
-    write_bench_json(records)
-    print(f"# wrote {BENCH_JSON} ({len(records)} rows)")
+    for name, fn in SMOKES.items():
+        if only and name not in only:
+            continue
+        fn(records=records)
+    write_bench_json(records, merge=bool(only))
+    print(f"# wrote {BENCH_JSON} ({len(records)} rows"
+          f"{' merged' if only else ''})")

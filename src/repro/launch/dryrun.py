@@ -341,6 +341,45 @@ def rng_fanout_cell(*, multi_pod: bool = False, num_streams: int = 2 ** 14,
     return report
 
 
+def service_cell(*, burst: int = 192, tenants: int = 96,
+                 seed: int = 11) -> Dict[str, Any]:
+    """In-process RandService burst on the forced host platform.
+
+    The serving analogue of ``rng_fanout_cell``: fires a deterministic
+    mixed (shape, sampler, dtype) burst through the coalescing frontend
+    + standing pool, then asserts the acceptance properties — zero
+    counter-window overlap (ledger-verified on both the live service
+    and the journal) and bit-identical journal replay — and reports
+    requests/s, p50/p99 latency and the coalescing factor.
+    """
+    from repro.service import (Journal, RandServer, ServerConfig, replay,
+                               verify_ledger_disjoint)
+    from repro.service.audit import response_digest
+    from repro.service.burst import make_requests, run_burst
+
+    journal = Journal()
+    server = RandServer(seed, config=ServerConfig(
+        max_batch=64, max_delay_s=0.25,
+        hot_classes=(("uniform", "float32"),)), journal=journal)
+    t0 = time.time()
+    responses = run_burst(server, make_requests(
+        burst=burst, tenants=tenants, seed=seed))
+    wall_s = time.time() - t0
+    stats = server.stats()
+    windows = verify_ledger_disjoint(server.block_service)
+    verify_ledger_disjoint(journal)
+    digest = response_digest(responses)
+    replay_ok = response_digest(replay(journal, seed=seed)) == digest
+    server.shutdown()
+    return {
+        "kind": "service", "burst": burst, "tenants": tenants,
+        "seed": seed, "wall_s": round(wall_s, 3), "digest": digest,
+        "replay_ok": replay_ok, "ledger_windows": windows,
+        "stats": {k: (round(v, 4) if isinstance(v, float) else v)
+                  for k, v in stats.items()},
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -358,7 +397,29 @@ def main():
                     help="compile the RNG (host, stream) block fan-out on "
                          "the production mesh(es) and report collective "
                          "bytes (expected 0) + memory")
+    ap.add_argument("--service", action="store_true",
+                    help="run an in-process RandService mixed burst and "
+                         "report requests/s, latency, coalescing factor, "
+                         "ledger disjointness and replay bit-identity")
     args = ap.parse_args()
+
+    if args.service:
+        os.makedirs(args.out, exist_ok=True)
+        rep = service_cell()
+        with open(os.path.join(args.out, "service.json"), "w") as f:
+            json.dump(rep, f, indent=2)
+        s = rep["stats"]
+        status = "OK" if rep["replay_ok"] else "FAIL"
+        print(f"[{status}] service burst={rep['burst']} "
+              f"tenants={s['tenants']} req/s={s['requests_per_s']:.0f} "
+              f"p50={s['latency_p50_ms']:.1f}ms "
+              f"p99={s['latency_p99_ms']:.1f}ms "
+              f"calls/req={s['calls_per_request']:.3f} "
+              f"replay={'bit-identical' if rep['replay_ok'] else 'MISMATCH'}",
+              flush=True)
+        if not rep["replay_ok"]:
+            raise SystemExit("service replay mismatch")
+        return
 
     if args.rng_fanout:
         os.makedirs(args.out, exist_ok=True)

@@ -1,12 +1,12 @@
 """Batched serving driver: prefill a batch of prompts, then step-decode.
 
-Sampling randomness comes through the block-delivery layer: with
-``temperature > 0`` the server opens a ``BlockService`` sampler channel
-and leases ONE counter window covering the whole generation
-(``gen * batch * vocab`` gumbel draws); decode step ``i`` reads the
-window slice at ``i * batch * vocab``.  Sampling is therefore
-counter-addressed (replayable from the lease alone) and the ledger makes
-re-spending a window across requests a structural error.
+Sampling randomness comes from the randomness-as-a-service layer: with
+``temperature > 0`` the server is RandService's first in-process client
+— each decode step requests a ``(batch, vocab)`` uniform block for the
+``launch/serve`` tenant and samples by gumbel-max.  Every draw is
+therefore tenant-attributed, quota-metered, ledger-fenced and (with a
+journal) replayable to bit-identical tokens; the token sampler shares
+its generation substrate with every other tenant of the service.
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke \\
       --batch 4 --prompt-len 32 --gen 16 --temperature 0.8
@@ -21,28 +21,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import stream as tstream
 from repro.data import SyntheticLMPipeline
 from repro.launch.train import pipeline_for, smoke_config
 from repro.models import registry
-from repro.runtime import BlockService
+from repro.service import RandServer, ServerConfig
 
-SAMPLER_CHANNEL = "serve/sampler"
+SAMPLER_TENANT = "launch/serve"
 
 
-def _pick(logits, sample_stream, temperature: float, draws_per_step: int):
-    """Greedy at temperature 0; else gumbel-max over one window slice."""
-    if temperature <= 0.0 or sample_stream is None:
-        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), \
-            sample_stream
-    tok = tstream.categorical(sample_stream,
-                              logits.astype(jnp.float32) / temperature)
-    return tok[:, None].astype(jnp.int32), \
-        tstream.advance(sample_stream, draws_per_step)
+def _pick(logits, rand: RandServer, temperature: float):
+    """Greedy at temperature 0; else gumbel-max over one service request."""
+    if temperature <= 0.0 or rand is None:
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    u = rand.request(SAMPLER_TENANT, logits.shape, sampler="uniform")
+    tiny = np.float32(1e-20)
+    g = -np.log(-np.log(u + tiny) + tiny)
+    tok = jnp.argmax(logits.astype(jnp.float32) / temperature + g, -1)
+    return tok[:, None].astype(jnp.int32)
 
 
 def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
-          temperature: float = 0.0, service: BlockService = None):
+          temperature: float = 0.0, rand: RandServer = None):
     model = registry.build(cfg)
     params, _ = model.init(seed)
     pipe = pipeline_for(cfg, batch, max(prompt_len, 2), seed)
@@ -51,14 +50,11 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
                for k, v in b.items()}
     prompts.pop("labels", None)
 
-    sample_stream = None
-    lease = None
-    if temperature > 0.0:
-        service = service or BlockService(seed)
-        service.open(SAMPLER_CHANNEL)
-        lease = service.lease(SAMPLER_CHANNEL, gen * batch * cfg.vocab)
-        sample_stream = lease.stream()
-    draws_per_step = batch * cfg.vocab
+    own_rand = False
+    if temperature > 0.0 and rand is None:
+        # single in-process client: flush every request immediately
+        rand = RandServer(seed, config=ServerConfig(max_batch=1))
+        own_rand = True
 
     total_ctx = prompt_len + gen
     prefill = jax.jit(model.prefill)
@@ -73,24 +69,19 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     t_prefill = time.time() - t0
 
     try:
-        tok, sample_stream = _pick(logits, sample_stream, temperature,
-                                   draws_per_step)
+        tok = _pick(logits, rand, temperature)
         out = [np.asarray(tok)]
         t1 = time.time()
         for i in range(gen - 1):
             logits, cache = decode(params, cache, tok,
                                    jnp.int32(prompt_len + i))
-            tok, sample_stream = _pick(logits, sample_stream, temperature,
-                                       draws_per_step)
+            tok = _pick(logits, rand, temperature)
             out.append(np.asarray(tok))
         jax.block_until_ready(tok)
         t_decode = time.time() - t1
-    except Exception:
-        if lease is not None:
-            lease.release()      # failed request: window may be re-leased
-        raise
-    if lease is not None:
-        lease.commit()
+    finally:
+        if own_rand:
+            rand.shutdown()      # drain the in-process sampler service
     toks = np.concatenate(out, axis=1)
     return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
                   "decode_tok_s": batch * (gen - 1) / max(t_decode, 1e-9)}
@@ -129,8 +120,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0,
-                    help="0 = greedy; > 0 samples via a leased gumbel "
-                         "window (counter-addressed, replayable)")
+                    help="0 = greedy; > 0 samples via per-step RandService "
+                         "uniform requests (tenant-attributed, journaled, "
+                         "replayable)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

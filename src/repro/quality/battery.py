@@ -2,8 +2,9 @@
 
 ``run_battery(profile=...)`` draws blocks through the real delivery
 surfaces — ``engine.generate`` (every backend, both decorrelator modes),
-``engine.generate_sharded`` (the mesh fan-out), and leased
-``runtime.blocks.BlockService`` windows — runs the Crush-lite tests
+``engine.generate_sharded`` (the mesh fan-out), leased
+``runtime.blocks.BlockService`` windows, and coalesced multi-tenant
+``repro.service`` frontend requests — runs the Crush-lite tests
 (``repro.quality.crush``) per stream column with TestU01-style two-level
 aggregation, and the inter-stream cross-battery
 (``repro.quality.cross``) at S = 2**10, then renders one deterministic,
@@ -119,6 +120,38 @@ def _sharded_block(seed: int, t: int, s: int, mode: str,
     return np.asarray(engine.generate_sharded(plan))
 
 
+def _service_block(seed: int, t: int, s: int, deco: str) -> np.ndarray:
+    """(T, S) uint32 drawn through the RandService coalescing frontend.
+
+    One single-column request per stream from ``s`` DISTINCT tenants —
+    the multi-tenant serving surface: every column is a different
+    tenant's region of the class family, packed into one fused
+    gathered-tag call.  Each response is parity-checked against its
+    journal replay (a stand-alone per-request ``engine.generate``), so
+    the battery asserts, not assumes, that coalesced slices equal bulk
+    generation."""
+    from repro.runtime import blocks
+    from repro.service import audit as audit_mod
+    from repro.service.frontend import Coalescer, RandRequest
+    from repro.service.tenants import TenantRegistry
+    journal = audit_mod.Journal()
+    service = blocks.BlockService(seed, backend="xla")
+    co = Coalescer(service, TenantRegistry(), journal=journal,
+                   backend="xla", deco=deco, max_rows=t)
+    reqs = [RandRequest(tenant_id=f"quality/{j:04d}", shape=(t,),
+                        rid=f"q{j:04d}") for j in range(s)]
+    responses, _, errors = co.flush(reqs)
+    if errors:
+        raise AssertionError(f"service flush errors: {errors}")
+    replayed = audit_mod.replay(journal, seed=seed, backend="xla")
+    block = np.stack([responses[f"q{j:04d}"] for j in range(s)], axis=1)
+    direct = np.stack([replayed[f"q{j:04d}"] for j in range(s)], axis=1)
+    if not np.array_equal(block, direct):
+        raise AssertionError(
+            "coalesced service responses disagree with journal replay")
+    return block
+
+
 def _ablation_block(seed: int, t: int, s: int, kind: str) -> np.ndarray:
     """(T, S) uint32 for the paper's Table 3/4 ablation baselines."""
     from repro.core import baselines
@@ -215,6 +248,11 @@ def battery_configs() -> List[GeneratorConfig]:
             name=f"thundering/{mode}/sharded", expect="pass", kind="sharded",
             mode=mode, run_intra=False, run_cross=True,
             delivery="engine.generate_sharded (stream-axis mesh fan-out)"))
+    cfgs.append(GeneratorConfig(
+        name="thundering/ctr/service", expect="pass", kind="service",
+        mode="ctr", backend="xla", run_cross=True,
+        delivery="repro.service coalesced frontend (one request per "
+                 "tenant, replay parity-checked vs engine.generate)"))
     for kind in ("raw_lcg", "no_deco"):
         cfgs.append(GeneratorConfig(
             name=f"ablation/{kind}", expect="fail", kind=kind,
@@ -230,6 +268,8 @@ def _draw(cfg: GeneratorConfig, seed: int, t: int, s: int) -> np.ndarray:
         return _leased_block(seed, t, s, cfg.mode, cfg.deco)
     if cfg.kind == "sharded":
         return _sharded_block(seed, t, s, cfg.mode, cfg.deco)
+    if cfg.kind == "service":
+        return _service_block(seed, t, s, cfg.deco)
     return _ablation_block(seed, t, s, cfg.kind)
 
 

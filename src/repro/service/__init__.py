@@ -1,0 +1,22 @@
+"""RandService: multi-tenant randomness-as-a-service.
+
+The serving layer over ``core.engine`` + ``runtime.blocks``: a
+deterministic tenant registry (``tenants``), a request-coalescing
+frontend (``frontend``), a bounded-queue dispatch server with standing
+producer pools (``server``), and an append-only replayable request
+journal (``audit``).  See ``docs/service.md``.
+"""
+from repro.service.audit import Journal, replay, verify_ledger_disjoint
+from repro.service.frontend import (Coalescer, RandRequest, class_channel,
+                                    request_rows)
+from repro.service.server import RandServer, ServerConfig, ServiceClosed
+from repro.service.tenants import (QuotaExceeded, Tenant,
+                                   TenantCollisionError, TenantRegistry,
+                                   tenant_region)
+
+__all__ = [
+    "Coalescer", "Journal", "QuotaExceeded", "RandRequest", "RandServer",
+    "ServerConfig", "ServiceClosed", "Tenant", "TenantCollisionError",
+    "TenantRegistry", "class_channel", "replay", "request_rows",
+    "tenant_region", "verify_ledger_disjoint",
+]

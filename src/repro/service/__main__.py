@@ -1,0 +1,135 @@
+"""``python -m repro.service`` — serve a deterministic mixed burst.
+
+Starts a RandServer, fires ``--burst`` mixed (shape, sampler, dtype)
+requests from ``--tenants`` distinct tenants, prints serving stats
+(requests/s, p50/p99 latency, coalescing factor) and an
+order-independent response digest, then drains gracefully.
+
+  PYTHONPATH=src python -m repro.service --burst 512 --tenants 1024 \\
+      --journal /tmp/rand.jsonl --verify-replay
+
+``--verify-replay`` re-reads the journal in a FRESH server context and
+asserts byte-identical regeneration; ``--linger`` keeps the server up
+after the burst until SIGINT, which triggers the graceful drain (the
+Makefile's ``make service`` and the SIGINT test drive this path).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import signal
+import sys
+import threading
+import time
+
+from repro.service import audit
+from repro.service.burst import make_requests, run_burst
+from repro.service.server import RandServer, ServerConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--burst", type=int, default=512)
+    ap.add_argument("--tenants", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-delay", type=float, default=0.25,
+                    help="microbatch deadline seconds (generous default "
+                         "keeps single-threaded bursts deterministic)")
+    ap.add_argument("--submit-threads", type=int, default=0,
+                    help="0 = in-order submission (deterministic); >0 = "
+                         "concurrent submitter threads")
+    ap.add_argument("--hot", action="store_true",
+                    help="standing producer pool for uniform/float32")
+    ap.add_argument("--journal", default=None,
+                    help="journal JSONL path (default: in-memory)")
+    ap.add_argument("--verify-replay", action="store_true")
+    ap.add_argument("--digest-out", default=None,
+                    help="write the response digest to this file")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write stats+digest JSON to this file")
+    ap.add_argument("--linger", type=float, default=0.0,
+                    help="stay up this many seconds after the burst "
+                         "(SIGINT drains gracefully and exits 0)")
+    args = ap.parse_args(argv)
+
+    deterministic = args.submit_threads == 0
+    cfg = ServerConfig(
+        max_batch=args.max_batch, max_delay_s=args.max_delay,
+        queue_depth=max(4096, args.burst),
+        hot_classes=((("uniform", "float32"),) if args.hot else ()))
+    journal = audit.Journal(args.journal)
+    # deterministic mode: enqueue the WHOLE burst before the dispatch
+    # loop starts, so microbatch composition is count-based (chunks of
+    # max_batch in submission order), never wall-clock-based — the
+    # cross-run digest comparison must not depend on scheduler timing
+    server = RandServer(args.seed, config=cfg, journal=journal,
+                        start=not deterministic)
+
+    interrupted = threading.Event()
+
+    def on_sigint(signum, frame):
+        interrupted.set()
+
+    signal.signal(signal.SIGINT, on_sigint)
+
+    reqs = make_requests(burst=args.burst, tenants=args.tenants,
+                         seed=args.seed)
+    t0 = time.perf_counter()
+    if deterministic:
+        futs = [server.submit(r) for r in reqs]
+        server.start()
+        responses = {r.rid: f.result(timeout=600)
+                     for r, f in zip(reqs, futs)}
+    else:
+        responses = run_burst(server, reqs,
+                              submit_threads=args.submit_threads)
+    wall_s = time.perf_counter() - t0
+    digest = audit.response_digest(responses)
+    stats = server.stats()
+    audit.verify_ledger_disjoint(server.block_service)
+    if journal.windows():
+        audit.verify_ledger_disjoint(journal)
+
+    print(f"served {len(responses)}/{args.burst} requests from "
+          f"{stats['tenants']} tenants in {wall_s:.3f}s "
+          f"({len(responses) / wall_s:.0f} req/s wall)")
+    print(f"latency p50={stats['latency_p50_ms']:.2f}ms "
+          f"p99={stats['latency_p99_ms']:.2f}ms")
+    print(f"coalescing: {stats['engine_calls']} engine calls + "
+          f"{stats['lease_calls']} leases for {stats['requests_served']} "
+          f"requests ({stats['calls_per_request']:.3f} calls/request, "
+          f"fill {stats['fill_ratio']:.3f})")
+    print(f"digest {digest}")
+
+    rc = 0
+    if args.verify_replay:
+        replayed = audit.replay(journal, seed=args.seed)
+        same = (set(replayed) == set(responses)
+                and audit.response_digest(replayed) == digest)
+        print(f"replay: {'OK — bit-identical' if same else 'MISMATCH'} "
+              f"({len(replayed)} journaled requests)")
+        if not same:
+            rc = 1
+
+    if args.digest_out:
+        with open(args.digest_out, "w") as f:
+            f.write(digest + "\n")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"burst": args.burst, "tenants": args.tenants,
+                       "seed": args.seed, "wall_s": wall_s,
+                       "digest": digest, "stats": stats}, f, indent=2)
+
+    if args.linger > 0 and rc == 0:
+        print("ready (SIGINT to drain)", flush=True)
+        deadline = time.monotonic() + args.linger
+        while not interrupted.is_set() and time.monotonic() < deadline:
+            interrupted.wait(0.1)
+    server.shutdown()
+    print("drained", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Deterministic mixed-traffic burst driver for RandService.
+
+One shared implementation of "fire a burst of mixed (shape, sampler,
+dtype) requests from many tenants and account for every byte", used by
+``python -m repro.service``, the ``--service`` dry-run scenario, the
+``service_smoke`` benchmark rows, and the acceptance tests.
+
+The request list is a pure function of ``(seed, burst, tenants)`` —
+reproducing a burst in another process (the CI determinism check runs
+the module twice and compares response digests) needs no coordination
+beyond the same three integers.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.service.frontend import RandRequest
+
+#: the mixed request classes a burst cycles through
+BURST_CLASSES: Tuple[Tuple[str, str], ...] = (
+    ("bits", "float32"),
+    ("uniform", "float32"),
+    ("uniform", "bfloat16"),
+    ("normal", "float32"),
+    ("bernoulli(0.25)", "float32"),
+)
+
+
+def make_requests(*, burst: int, tenants: int, seed: int,
+                  max_side: int = 64,
+                  rid_prefix: str = "burst") -> List[RandRequest]:
+    """``burst`` rid-stamped requests over ``tenants`` distinct tenant
+    ids with mixed shapes (1-D and 2-D), samplers and dtypes.
+
+    ``rid_prefix`` keeps rids unique across bursts sharing one journal
+    (journaled rids may never repeat)."""
+    rng = random.Random(seed ^ 0x5EED5)
+    reqs: List[RandRequest] = []
+    for i in range(burst):
+        sampler, dtype = BURST_CLASSES[i % len(BURST_CLASSES)]
+        if rng.random() < 0.5:
+            shape: Tuple[int, ...] = (rng.randint(1, max_side * max_side),)
+        else:
+            shape = (rng.randint(1, max_side), rng.randint(1, max_side))
+        reqs.append(RandRequest(
+            tenant_id=f"tenant/{i % tenants:05d}", shape=shape,
+            sampler=sampler, out_dtype=dtype, rid=f"{rid_prefix}/{i:06d}"))
+    return reqs
+
+
+def run_burst(server, requests: List[RandRequest], *,
+              submit_threads: int = 0,
+              timeout: Optional[float] = 120.0
+              ) -> Dict[str, np.ndarray]:
+    """Submit ``requests`` and gather every response.
+
+    ``submit_threads=0`` submits in order from the calling thread
+    (deterministic batching — what the CI determinism check uses);
+    ``submit_threads>0`` fans submission over a thread pool (the
+    concurrent-burst acceptance test).
+    """
+    if submit_threads > 0:
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=submit_threads) as ex:
+            futs = list(ex.map(server.submit, requests))
+    else:
+        futs = [server.submit(r) for r in requests]
+    return {r.rid: f.result(timeout=timeout)
+            for r, f in zip(requests, futs)}

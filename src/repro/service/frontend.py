@@ -1,0 +1,357 @@
+"""Request coalescing: many small heterogeneous requests, few fused calls.
+
+A randomness request is tiny — "tenant X wants an (8, 17) float32
+uniform block" — and a service that issued one engine call per request
+would spend its life in dispatch overhead.  The ThundeRiNG substrate
+offers a better shape: every sample is counter-addressed, a pure
+function of ``(x0, h_tag, ctr + t)``, and *columns are the cheap axis*
+(the paper's SOU-instance scaling).  So the coalescer packs a
+microbatch of requests into one fused ``engine.generate`` per request
+class:
+
+  * requests are grouped by **class** ``(sampler, out_dtype)``; each
+    class owns one ``BlockService`` channel (one ``GenPlan`` family of
+    the service seed, all tenants shared),
+  * the batch leases ONE counter window ``[lo, lo + T)`` on the class
+    channel's ledger (PR 3 accounting: overlap is structurally
+    impossible), with ``T`` the largest quantized row count any request
+    in the batch needs,
+  * each request is assigned ``ceil(n / T)`` *columns* — leaf tags
+    drawn from its tenant's private region (``repro.service.tenants``),
+    packed per tenant in arrival order — and the whole batch becomes a
+    single gathered-tag ``(T, S)`` plan,
+  * responses are column-major slices: request ``i`` reads its columns
+    top-to-bottom and keeps the first ``n`` samples.
+
+Because every element is a pure function of its (tag, counter)
+address, a request's bytes do not depend on which batch it rode in
+*given its assignment* — the journal (``repro.service.audit``) records
+the assignment, and replaying it through plain ``engine.generate``
+reproduces every response bit-identically.
+
+The per-shape jitted window functions keep the counter and the tag
+table TRACED, so steady traffic reuses a small set of executables
+(shapes are quantized: rows to powers of two up to ``max_rows``,
+columns padded to the next power of two).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, sampler as sampler_mod, u64
+from repro.runtime import blocks
+from repro.service import tenants as tenants_mod
+
+#: row-count ceiling for one coalesced window (counter steps per lease)
+DEFAULT_MAX_ROWS = 2048
+_MIN_ROWS = 8
+
+
+def class_channel(sampler: str, out_dtype: str) -> str:
+    """Ledger/family channel name for one (sampler, dtype) request class.
+
+    Distinct classes get distinct channels, hence distinct ``GenPlan``
+    families (disjoint h-spaces of the same root seed) and independent
+    counter ledgers — a uniform/float32 window can never alias a
+    bits/uint32 window.
+    """
+    return f"service/class/{sampler}/{out_dtype}"
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def request_rows(n: int, max_rows: int = DEFAULT_MAX_ROWS) -> int:
+    """Quantized row count for an ``n``-sample request: the next power
+    of two, clamped to ``[8, max_rows]`` (powers of two keep the jit
+    cache small and satisfy the normal sampler's even-T constraint)."""
+    if n <= 0:
+        raise ValueError(f"request size must be positive, got {n}")
+    return max(_MIN_ROWS, min(_next_pow2(n), max_rows))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandRequest:
+    """One tenant's ask: ``shape`` samples of ``sampler``/``out_dtype``.
+
+    ``rid`` names the request in responses and in the journal; the
+    server assigns one when the caller does not.
+
+    Example:
+        >>> from repro.service.frontend import RandRequest
+        >>> r = RandRequest(tenant_id="alice", shape=(4, 3),
+        ...                 sampler="uniform", rid="r0")
+        >>> r.num_samples
+        12
+    """
+    tenant_id: str
+    shape: Tuple[int, ...]
+    sampler: str = "bits"
+    out_dtype: str = "float32"
+    rid: Optional[str] = None
+
+    @property
+    def num_samples(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n
+
+    @property
+    def klass(self) -> Tuple[str, str]:
+        return (self.sampler, self.out_dtype)
+
+    def validate(self) -> None:
+        spec = sampler_mod.parse(self.sampler)        # raises on bad spec
+        sampler_mod.result_dtype(spec, self.out_dtype)
+        if self.num_samples <= 0:
+            raise ValueError(f"empty request shape {self.shape!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """Where one request's samples live: the journal-able provenance.
+
+    ``replay`` (``repro.service.audit``) needs nothing else: the plan
+    is ``(seed, channel->purpose, tags, [lo, lo+rows), sampler,
+    out_dtype)`` and the response is the column-major flatten of the
+    generated ``(rows, len(tags))`` block truncated to ``n``.
+    """
+    rid: str
+    tenant_id: str
+    sampler: str
+    out_dtype: str
+    shape: Tuple[int, ...]
+    channel: str
+    lo: int                 # counter-window start (lease.lo)
+    rows: int               # counter-window length (the batch's T)
+    tags: Tuple[int, ...]   # absolute leaf tags of the assigned columns
+    deco: str = "splitmix64"
+
+    @property
+    def num_samples(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n
+
+
+def slice_response(block: np.ndarray, col0: int, ncols: int,
+                   assignment_n: int, shape: Tuple[int, ...]) -> np.ndarray:
+    """Column-major slice: columns ``[col0, col0+ncols)`` read
+    top-to-bottom, first ``n`` samples, reshaped."""
+    flat = np.ascontiguousarray(block[:, col0:col0 + ncols].T).reshape(-1)
+    return flat[:assignment_n].reshape(shape)
+
+
+class Coalescer:
+    """Batches requests into one leased fused engine call per class.
+
+    ``flush(requests)`` is deterministic in the ORDER of ``requests``:
+    the same ordered list against the same service/ledger state always
+    produces the same assignments and the same bytes (the async server
+    on top only adds arrival ordering; the quality battery calls this
+    directly for a fully deterministic delivery surface).
+    """
+
+    def __init__(self, service: blocks.BlockService,
+                 registry: tenants_mod.TenantRegistry, *,
+                 journal=None, backend: Optional[str] = None,
+                 deco: str = "splitmix64",
+                 max_rows: int = DEFAULT_MAX_ROWS):
+        self.service = service
+        self.registry = registry
+        self.journal = journal
+        self.backend = backend
+        self.deco = deco
+        self.max_rows = max_rows
+        self._window_fns: Dict[Tuple, Callable] = {}
+        self._fn_lock = threading.Lock()
+        # cumulative coalescing stats (read by RandServer.stats)
+        self.requests_served = 0
+        self.engine_calls = 0
+        self.lease_calls = 0
+        self.samples_served = 0
+        self.samples_generated = 0
+
+    # -- fused window functions -------------------------------------------
+
+    def _window_fn(self, purpose: int, rows: int, cols: int, sampler: str,
+                   out_dtype: str) -> Callable:
+        """One jitted gathered-tag window fn per quantized shape class.
+
+        Tags and counter are TRACED; only (purpose, rows, padded cols,
+        sampler, dtype) key the cache, so steady mixed traffic runs on
+        a handful of executables.
+        """
+        key = (purpose, rows, cols, sampler, out_dtype)
+        with self._fn_lock:
+            fn = self._window_fns.get(key)
+        if fn is not None:
+            return fn
+        x0, h_fam = engine.family_from_seed(self.service.seed, purpose)
+        deco, backend = self.deco, self.backend
+        block_t, block_s = self.service.block_t, self.service.block_s
+
+        @jax.jit
+        def window(tag_hi, tag_lo, ctr_hi, ctr_lo):
+            h = engine.derive_leaf(
+                (jnp.broadcast_to(jnp.asarray(h_fam[0]), tag_hi.shape),
+                 jnp.broadcast_to(jnp.asarray(h_fam[1]), tag_lo.shape)),
+                (tag_hi, tag_lo))
+            plan = engine.GenPlan(
+                x0=x0, h=h, num_steps=rows, ctr=(ctr_hi, ctr_lo),
+                offset=None, mode="ctr", deco=deco, sampler=sampler,
+                out_dtype=out_dtype)
+            return engine.generate(plan, backend=backend, block_t=block_t,
+                                   block_s=block_s)
+
+        with self._fn_lock:
+            fn = self._window_fns.setdefault(key, window)
+        return fn
+
+    # -- batching ----------------------------------------------------------
+
+    def flush(self, requests: List[RandRequest]
+              ) -> Tuple[Dict[str, np.ndarray], List[Assignment],
+                         Dict[str, BaseException]]:
+        """Serve an ordered microbatch; returns (responses by rid,
+        assignments in request order, per-rid errors).
+
+        Quota rejections and invalid requests fail individually; the
+        rest of the batch is unaffected.
+        """
+        by_class: Dict[Tuple[str, str], List[RandRequest]] = {}
+        errors: Dict[str, BaseException] = {}
+        rids = [req.rid for req in requests]
+        if None in rids:
+            raise ValueError("flush needs rid-stamped requests")
+        if len(set(rids)) != len(rids):
+            raise ValueError("flush needs unique rids within a batch")
+        for req in requests:
+            try:
+                req.validate()
+            except Exception as e:
+                errors[req.rid] = e
+                continue
+            by_class.setdefault(req.klass, []).append(req)
+
+        responses: Dict[str, np.ndarray] = {}
+        assignments: List[Assignment] = []
+        for klass in sorted(by_class):
+            try:
+                got, asg, errs = self._flush_class(klass, by_class[klass])
+            except Exception as e:
+                # one class's failure (lease/engine) fails ITS requests
+                # only; _flush_class already refunded and released
+                for req in by_class[klass]:
+                    errors.setdefault(req.rid, e)
+                continue
+            responses.update(got)
+            assignments.extend(asg)
+            errors.update(errs)
+        # keep journal/assignment order = request order, not class order
+        order = {req.rid: i for i, req in enumerate(requests)}
+        assignments.sort(key=lambda a: order[a.rid])
+        if self.journal is not None:
+            for a in assignments:
+                self.journal.append_request(a)
+            self.journal.flush()
+        return responses, assignments, errors
+
+    def _flush_class(self, klass: Tuple[str, str],
+                     reqs: List[RandRequest]):
+        sampler, out_dtype = klass
+        channel = class_channel(sampler, out_dtype)
+        rows = max(request_rows(r.num_samples, self.max_rows) for r in reqs)
+
+        # pack columns: per-tenant slot cursors restart every batch (the
+        # fresh counter window is what makes the draws fresh)
+        cursors: Dict[str, int] = {}
+        packed = []          # (req, col0, ncols, tags)
+        tags: List[int] = []
+        errors: Dict[str, BaseException] = {}
+        for req in reqs:
+            n = req.num_samples
+            ncols = -(-n // rows)
+            try:
+                # every fallible admission check runs BEFORE charge():
+                # a rejected request must not consume quota
+                tenant = self.registry.register(req.tenant_id)
+                slot0 = cursors.get(req.tenant_id, 0)
+                if slot0 + ncols > tenant.region_slots:
+                    raise tenants_mod.QuotaExceeded(
+                        f"tenant {req.tenant_id!r} needs {slot0 + ncols} "
+                        f"slots in one microbatch; region has "
+                        f"{tenant.region_slots}")
+                self.registry.charge(req.tenant_id, n)
+            except Exception as e:
+                errors[req.rid] = e
+                continue
+            cursors[req.tenant_id] = slot0 + ncols
+            rtags = [tenant.tag(slot0 + j) for j in range(ncols)]
+            packed.append((req, len(tags), ncols, rtags))
+            tags.extend(rtags)
+        if not packed:
+            return {}, [], errors
+
+        cols = max(_MIN_ROWS, _next_pow2(len(tags)))
+        padded = tags + [tags[-1]] * (cols - len(tags))  # dup cols: sliced off
+        tag_hi = np.asarray([t >> 32 for t in padded], np.uint32)
+        tag_lo = np.asarray([t & 0xFFFFFFFF for t in padded], np.uint32)
+
+        self.service.open(channel, num_streams=1)
+        lease = self.service.lease(channel, rows)
+        self.lease_calls += 1
+        purpose = blocks.channel_purpose(channel)
+        fn = self._window_fn(purpose, rows, cols, sampler, out_dtype)
+        c_hi, c_lo = (u64.to_u32(v) for v in u64.const64(lease.lo))
+        try:
+            block = np.asarray(fn(jnp.asarray(tag_hi), jnp.asarray(tag_lo),
+                                  jnp.asarray(c_hi), jnp.asarray(c_lo)))
+        except Exception:
+            self.service.release(lease)
+            for req, _, _, _ in packed:   # nothing served: refund quota
+                self.registry.refund(req.tenant_id, req.num_samples)
+            raise
+        self.engine_calls += 1
+        if self.journal is not None:
+            self.journal.append_window(channel, lease.lo, lease.hi)
+        lease.commit()
+        self.samples_generated += rows * cols
+
+        responses: Dict[str, np.ndarray] = {}
+        assignments: List[Assignment] = []
+        for req, col0, ncols, rtags in packed:
+            n = req.num_samples
+            responses[req.rid] = slice_response(block, col0, ncols, n,
+                                                req.shape)
+            assignments.append(Assignment(
+                rid=req.rid, tenant_id=req.tenant_id, sampler=sampler,
+                out_dtype=out_dtype, shape=tuple(req.shape),
+                channel=channel, lo=lease.lo, rows=rows, tags=tuple(rtags),
+                deco=self.deco))
+            self.requests_served += 1
+            self.samples_served += n
+        return responses, assignments, errors
+
+    def stats(self) -> Dict[str, Any]:
+        served = max(1, self.requests_served)
+        return {
+            "requests_served": self.requests_served,
+            "engine_calls": self.engine_calls,
+            "lease_calls": self.lease_calls,
+            "calls_per_request": (self.engine_calls + self.lease_calls)
+                                 / served,
+            "samples_served": self.samples_served,
+            "samples_generated": self.samples_generated,
+            "fill_ratio": self.samples_served
+                          / max(1, self.samples_generated),
+        }

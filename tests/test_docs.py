@@ -16,6 +16,7 @@ import pytest
 from repro.core import engine, stream
 from repro.quality import battery
 from repro.runtime import blocks
+from repro.service import audit, frontend, server, tenants
 
 #: the audited public surface: (symbol, minimum docstring length)
 PUBLIC_SYMBOLS = [
@@ -56,6 +57,19 @@ PUBLIC_SYMBOLS = [
     blocks.Lease,
     blocks.BlockProducer,
     battery.run_battery,
+    tenants.tenant_region,
+    tenants.TenantRegistry,
+    frontend.RandRequest,
+    frontend.Coalescer,
+    frontend.class_channel,
+    server.ServerConfig,
+    server.RandServer,
+    server.RandServer.submit,
+    server.RandServer.request,
+    server.RandServer.stats,
+    audit.Journal,
+    audit.replay,
+    audit.verify_ledger_disjoint,
 ]
 
 #: symbols whose docstring must include a runnable ``>>>`` example
@@ -68,6 +82,8 @@ EXAMPLE_BEARING = [
     stream.categorical,
     blocks.BlockService, blocks.Lease, blocks.BlockProducer,
     battery.run_battery,
+    tenants.tenant_region, tenants.TenantRegistry,
+    frontend.RandRequest, server.RandServer, audit.Journal, audit.replay,
 ]
 
 
@@ -89,7 +105,8 @@ def test_public_symbol_has_example(symbol):
         f"{symbol!r} must carry a runnable Example: doctest block")
 
 
-@pytest.mark.parametrize("module", [engine, stream, blocks],
+@pytest.mark.parametrize("module", [engine, stream, blocks, tenants,
+                                    frontend, server, audit],
                          ids=lambda m: m.__name__)
 def test_doctests_run_clean(module):
     results = doctest.testmod(module, verbose=False)
