@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke install-dev service service-smoke
+.PHONY: test test-fast bench bench-smoke install-dev service service-smoke roofline roofline-full
 
 install-dev:
 	$(PY) -m pip install -e ".[test]"
@@ -23,3 +23,9 @@ service:           ## RandService: 1024-tenant burst + replay check, then serve 
 
 service-smoke:     ## RandService burst bench rows only (service/* in BENCH_throughput.json)
 	$(PY) -m benchmarks.throughput service
+
+roofline:          ## roofline smoke + regression gate (merges roofline/* rows, fails if fused/donated regress)
+	$(PY) -m benchmarks.roofline --check
+
+roofline-full:     ## full roofline sweep (S=T=2048, all sampler classes) + gate
+	$(PY) -m benchmarks.roofline --full --check

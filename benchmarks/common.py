@@ -1,9 +1,54 @@
-"""Timing helpers for the benchmark harnesses."""
+"""Timing + row-schema helpers for the benchmark harnesses."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
+from typing import Optional
 
 import jax
+
+BENCH_JSON = pathlib.Path("BENCH_throughput.json")
+
+
+def bytes_per_sample(sampler: str, out_dtype: str) -> Optional[float]:
+    """Bytes WRITTEN per delivered sample for a (sampler, out_dtype) row.
+
+    Bulk generation's only memory traffic is the output block (state and
+    hash tables are cache/VMEM-resident), so bytes/sample is just the
+    result element width: 4 for bits/uint32 and f32, 2 for bf16, 1 for
+    bernoulli bool.  Returns None for unparseable pseudo-classes (e.g.
+    the service row's "mixed") — callers drop the bandwidth fields.
+    """
+    from repro.core import sampler as sampler_mod
+    try:
+        spec = sampler_mod.parse(sampler)
+        dt = sampler_mod.result_dtype(spec, out_dtype)
+    except ValueError:
+        return None
+    import jax.numpy as jnp
+    return float(jnp.dtype(dt).itemsize)
+
+
+def write_bench_json(records, path: pathlib.Path = BENCH_JSON, *,
+                     merge: bool = False) -> None:
+    """Dump the perf-trajectory rows; ``merge=True`` (filtered smoke
+    runs) replaces only the matching (name, variant) rows in an
+    existing file instead of discarding the other sections' rows."""
+    if merge and path.exists():
+        try:
+            old = json.loads(path.read_text()).get("rows", [])
+        except (json.JSONDecodeError, OSError):
+            old = []
+        fresh = {(r.get("name"), r.get("variant")) for r in records}
+        records = [r for r in old
+                   if (r.get("name"), r.get("variant")) not in fresh] \
+                  + list(records)
+    path.write_text(json.dumps({
+        "schema": "bench_throughput/v1",
+        "platform": jax.default_backend(),
+        "rows": records,
+    }, indent=1))
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw):
@@ -36,6 +81,7 @@ def time_fn_stats(fn, *args, iters: int = 5, warmup: int = 2, **kw):
     times.sort()
     med = times[len(times) // 2]
     return {"median_s": med, "us_per_call": med * 1e6,
+            "best_s": times[0],
             "first_call_us": first * 1e6,
             "compile_us": max(0.0, (first - med) * 1e6)}
 

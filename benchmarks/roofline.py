@@ -1,24 +1,236 @@
-"""Deliverable (g): roofline table from the dry-run artifacts.
+"""Roofline harness: achieved GSample/s against the memory-bandwidth bound.
 
-Reads experiments/dryrun/*.json (produced by ``repro.launch.dryrun``) and
-emits one row per (arch x shape x mesh) with the three roofline terms,
-the dominant bottleneck and the useful-flops ratio.
+The paper's 655 GSample/s is a *bandwidth* statement: generation state is
+on-chip, so the only mandatory memory traffic is WRITING the samples, and
+the attainable rate is ``device_bandwidth / bytes_per_sample`` (205
+GSample/s for u32/f32 on one 819 GB/s v5e chip, 410 for bf16, 3.3 T for
+bernoulli bool).  This harness measures what the repo actually delivers
+and reports it as a fraction of that bound, per variant:
+
+  * ``single``       — one jitted ``engine.generate`` per window (the
+    seed baseline every other variant must beat),
+  * ``fused_w{W}``   — one jitted ``engine.generate_windows`` emitting W
+    windows per dispatch (amortized launch path),
+  * ``producer_d1``  — the standing ``BlockProducer`` at depth=1 (the
+    delivery layer's own baseline: thread + lease + queue overhead),
+  * ``donated_d{D}`` — depth-D producer cycling a fixed donated buffer
+    ring (allocation-free steady state).
+
+Bandwidth comes from a table of known TPU/GPU parts keyed on
+``device_kind``; on anything unrecognized (CPU CI) a measured jitted
+stream (read + write of a ~64 MiB buffer) stands in, tagged
+``measured:`` so rows are honest about the bound's provenance.  Every
+row lands in BENCH_throughput.json with ``roofline_pct`` and the paper's
+655 GSample/s reference.
+
+``check()`` is the CI gate: fused-W must hold >= ``CHECK_RATIO`` of the
+single-window rate and donated-depth >= the same ratio of producer_d1 —
+i.e. the optimized paths never regress below their OWN baseline tier
+(donated rings race the producer machinery, not raw jit dispatch, which
+a 1-CPU container could never honor).
+
+``dryrun_rows`` keeps the previous deliverable: re-printing the
+experiments/dryrun model-roofline artifacts when present.
 """
 from __future__ import annotations
 
+import functools
 import glob
 import json
 import os
 
-from benchmarks.common import row
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (bytes_per_sample, row, time_fn_stats,
+                               write_bench_json)
+from repro.core import engine
+from repro.runtime.blocks import BlockService, donation_supported
 
 DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
 
+PAPER_GSAMPLES = 655.0   # U250 @ 2560 streams, paper Fig. 6
+CHECK_RATIO = 0.75       # CI gate: optimized >= 75% of its baseline tier
 
-def run(out):
+# device_kind substring (lowercased) -> HBM/memory bandwidth, bytes/s.
+# First match wins; keep more specific parts before their prefixes.
+KNOWN_BW = (
+    ("v6e", 1640e9), ("v6 lite", 1640e9), ("trillium", 1640e9),
+    ("v5p", 2765e9), ("v5e", 819e9), ("v5 lite", 819e9),
+    ("v4", 1228e9), ("v3", 900e9), ("v2", 700e9),
+    ("h100", 3350e9), ("a100", 2039e9), ("v100", 900e9),
+)
+
+# (sampler, out_dtype) classes swept by the full run; smoke takes [:2].
+CASES = (
+    ("bits", "float32"),        # 4 B/sample  (uint32)
+    ("uniform", "bfloat16"),    # 2 B/sample
+    ("normal", "float32"),      # 4 B/sample
+    ("bernoulli(0.5)", "float32"),  # 1 B/sample (bool)
+)
+
+
+def _measured_bandwidth(nbytes: int = 1 << 26) -> float:
+    """Streaming bytes/s of a jitted elementwise pass (read + write)."""
+    x = jnp.zeros((nbytes // 4,), jnp.uint32)
+    f = jax.jit(lambda a: a + jnp.uint32(1))
+    st = time_fn_stats(f, x, iters=5, warmup=2)
+    return 2.0 * x.nbytes / st["median_s"]
+
+
+def detect_bandwidth() -> tuple:
+    """(bytes_per_s, source) for device 0 — part table, else measured."""
+    kind = jax.devices()[0].device_kind
+    low = kind.lower()
+    for sub, bw in KNOWN_BW:
+        if sub in low:
+            return bw, f"table:{kind}"
+    return _measured_bandwidth(), f"measured:{kind}"
+
+
+def _producer_pass(svc: BlockService, name: str, t: int, n_blocks: int,
+                   **prod_kw):
+    """One full producer drain (n_blocks fresh windows), for timing."""
+    def one_pass():
+        last = None
+        with svc.producer(name, t, count=n_blocks, **prod_kw) as prod:
+            for _, blk in prod:
+                last = blk
+        return jax.block_until_ready(last)
+    return one_pass
+
+
+def run(out, records=None, *, s: int = 2048, t: int = 2048,
+        n_blocks: int = 8, fuse_widths=(4, 8), depths=(2, 4),
+        cases=CASES, iters: int = 3) -> None:
+    """The engine roofline sweep + the legacy dryrun reprint."""
+    bw, bw_src = detect_bandwidth()
+    out(row("roofline/bandwidth", 0.0,
+            f"{bw / 1e9:.0f} GB/s ({bw_src}); paper ref "
+            f"{PAPER_GSAMPLES:.0f} GSample/s"))
+    donate_ok = donation_supported()
+    if not donate_ok:
+        out(row("roofline/donation", 0.0,
+                f"donation is a no-op on {jax.default_backend()}; "
+                f"donated_d* rows skipped"))
+
+    for sampler, out_dtype in cases:
+        bps = bytes_per_sample(sampler, out_dtype)
+        bound = bw / bps / 1e9          # GSample/s the memory system allows
+        plan = engine.make_plan(seed=31, num_streams=s, num_steps=t,
+                                sampler=sampler, out_dtype=out_dtype)
+        backend = engine.select_backend(plan)
+        tag = f"{sampler}/{out_dtype}"
+
+        def rec(variant, st, samples, **extra):
+            # achieved = best of the steady-state passes: a roofline
+            # asks what the path CAN sustain, and min-time is far more
+            # robust to scheduler jitter (1-CPU CI shares the core
+            # between producer and consumer threads) than a median of
+            # few passes.  us_per_call stays the median.
+            gs = samples / st["best_s"] / 1e9
+            pct = gs / bound
+            out(row(f"roofline/{tag}/{variant}", st["us_per_call"],
+                    f"{gs:.3f} GSample/s = {pct:.1%} of "
+                    f"{bound:.0f} bound ({bps:.0f} B/sample)"))
+            if records is not None:
+                records.append(dict(
+                    name=f"roofline/{tag}/S={s}", backend=backend,
+                    sampler=sampler, dtype=out_dtype, variant=variant,
+                    num_streams=s, num_steps=t,
+                    us_per_call=st["us_per_call"],
+                    compile_us=st["compile_us"], gsamples_per_s=gs,
+                    bytes_per_sample=bps, gbytes_per_s=gs * bps,
+                    bound_gsamples_per_s=bound, roofline_pct=pct,
+                    bandwidth_gbytes_per_s=bw / 1e9,
+                    bandwidth_source=bw_src,
+                    paper_gsamples_per_s=PAPER_GSAMPLES, **extra))
+            return gs
+
+        # single jitted window: the dispatch-path baseline
+        fn1 = jax.jit(functools.partial(engine.generate, plan,
+                                        backend=backend))
+        rec("single", time_fn_stats(fn1, iters=iters), s * t)
+
+        # fused multi-window dispatches
+        for w in fuse_widths:
+            fnw = jax.jit(functools.partial(engine.generate_windows, plan,
+                                            w, backend=backend))
+            rec(f"fused_w{w}", time_fn_stats(fnw, iters=iters), w * s * t,
+                fuse=w)
+
+        # delivery layer: producers at each depth with donation off then
+        # on — donated_dD races producer_dD, its equal-depth twin, so
+        # the gate isolates the donation cost from queue-depth effects.
+        # One standing service — successive timed passes consume fresh
+        # windows through one cached window executable; producer passes
+        # get extra iters because best-of must out-vote thread jitter.
+        svc = BlockService(seed=31)
+        svc.open("roofline", num_streams=s, sampler=sampler,
+                 out_dtype=out_dtype)
+        p_iters = iters + 2
+        for d in sorted(set((1,) + tuple(depths))):
+            one = _producer_pass(svc, "roofline", t, n_blocks, depth=d)
+            rec(f"producer_d{d}",
+                time_fn_stats(one, iters=p_iters, warmup=1),
+                n_blocks * s * t, depth=d)
+            if donate_ok and d in depths:
+                one = _producer_pass(svc, "roofline", t, n_blocks,
+                                     depth=d, donate=True)
+                rec(f"donated_d{d}",
+                    time_fn_stats(one, iters=p_iters, warmup=1),
+                    n_blocks * s * t, depth=d, donate=True)
+
+    dryrun_rows(out)
+
+
+def smoke(out=print, records=None) -> None:
+    """CI-sized roofline: two classes, small blocks, one fused width and
+    one donated depth — enough to populate roofline_pct rows and drive
+    ``check()`` without multi-minute CPU sweeps."""
+    run(out, records, s=256, t=512, n_blocks=8, fuse_widths=(4,),
+        depths=(2,), cases=CASES[:2], iters=3)
+
+
+def check(records) -> list:
+    """The regression gate: each optimized variant vs its baseline tier.
+
+    Returns a list of human-readable failures (empty = pass): fused-W
+    below ``CHECK_RATIO`` x single, or donated-depth below
+    ``CHECK_RATIO`` x producer_d1, per (sampler, dtype) row group.
+    """
+    groups = {}
+    for r in records:
+        if not str(r.get("name", "")).startswith("roofline/"):
+            continue
+        key = (r["sampler"], r["dtype"])
+        groups.setdefault(key, {})[r["variant"]] = r["gsamples_per_s"]
+    failures = []
+    for key, g in sorted(groups.items()):
+        for variant, gs in sorted(g.items()):
+            if variant.startswith("fused_"):
+                base_name = "single"
+            elif variant.startswith("donated_d"):
+                # equal-depth producer twin, else the depth-1 baseline
+                d = variant[len("donated_d"):]
+                base_name = (f"producer_d{d}"
+                             if f"producer_d{d}" in g else "producer_d1")
+            else:
+                continue
+            base = g.get(base_name)
+            if base and gs < CHECK_RATIO * base:
+                failures.append(
+                    f"{key[0]}/{key[1]}: {variant} {gs:.3f} GSample/s "
+                    f"< {CHECK_RATIO:.0%} of {base_name} {base:.3f}")
+    return failures
+
+
+def dryrun_rows(out) -> None:
+    """Legacy deliverable (g): model-roofline rows from the dry-run
+    artifacts in experiments/dryrun/*.json, when present."""
     files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
     if not files:
-        out(row("roofline/none", 0.0,
+        out(row("roofline/dryrun/none", 0.0,
                 "no dry-run artifacts; run python -m repro.launch.dryrun"))
         return
     for f in files:
@@ -41,3 +253,30 @@ def run(out):
             f" bottleneck={r['bottleneck'].replace('_s', '')}"
             f" useful_ratio={r['useful_flops_ratio']:.2f}"
             f" mem/dev={mem:.2f}GiB"))
+
+
+if __name__ == "__main__":
+    import sys
+    argv = sys.argv[1:]
+    do_check = "--check" in argv
+    full = "--full" in argv
+    unknown = set(argv) - {"--check", "--full"}
+    if unknown:
+        raise SystemExit(f"unknown flag(s) {sorted(unknown)}; "
+                         f"have --check, --full")
+    records: list = []
+    if full:
+        run(print, records)
+    else:
+        smoke(print, records)
+    write_bench_json(records, merge=True)
+    print(f"# merged {len(records)} roofline rows into "
+          f"BENCH_throughput.json")
+    if do_check:
+        failures = check(records)
+        for f in failures:
+            print(f"CHECK FAIL: {f}")
+        if failures:
+            sys.exit(1)
+        print(f"# check OK: fused/donated within {CHECK_RATIO:.0%} of "
+              f"their baselines")

@@ -28,7 +28,8 @@ def main() -> None:
          lambda o: throughput.service_smoke(o, records=records)),
         ("comparison", comparison.run),    # Tables 5/6
         ("apps", apps.run),                # Figs 8/9 + Table 7
-        ("roofline", roofline.run),        # deliverable (g)
+        ("roofline",                       # GSample/s vs bandwidth bound
+         lambda o: roofline.run(o, records=records)),
     ]
     t0 = time.time()
     failures = 0

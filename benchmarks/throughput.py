@@ -29,14 +29,12 @@ multi-tenant burst through the coalescing frontend + standing pool
 from __future__ import annotations
 
 import functools
-import json
-import pathlib
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn, time_fn_stats
+from benchmarks.common import (BENCH_JSON, bytes_per_sample, row, time_fn,
+                               time_fn_stats, write_bench_json)
 from repro.core import engine, sampler as sampler_mod
 from repro.kernels import ops
 from repro.runtime import BlockService
@@ -51,9 +49,6 @@ SAMPLER_CASES = (
     ("normal", "bfloat16"),
     ("bernoulli(0.5)", "float32"),
 )
-
-BENCH_JSON = pathlib.Path("BENCH_throughput.json")
-
 
 @functools.partial(jax.jit, static_argnames=("s", "t", "mode", "deco",
                                              "backend"))
@@ -84,29 +79,24 @@ def _two_pass(s: int, t: int, sampler: str, dtype: str, backend: str):
 
 
 def _record(records, **kw):
-    if records is not None:
-        records.append(kw)
+    """Append one perf-trajectory row, deriving the bandwidth fields.
 
-
-def write_bench_json(records, path: pathlib.Path = BENCH_JSON, *,
-                     merge: bool = False) -> None:
-    """Dump the perf-trajectory rows; ``merge=True`` (filtered smoke
-    runs) replaces only the matching (name, variant) rows in an
-    existing file instead of discarding the other sections' rows."""
-    if merge and path.exists():
-        try:
-            old = json.loads(path.read_text()).get("rows", [])
-        except (json.JSONDecodeError, OSError):
-            old = []
-        fresh = {(r.get("name"), r.get("variant")) for r in records}
-        records = [r for r in old
-                   if (r.get("name"), r.get("variant")) not in fresh] \
-                  + list(records)
-    path.write_text(json.dumps({
-        "schema": "bench_throughput/v1",
-        "platform": jax.default_backend(),
-        "rows": records,
-    }, indent=1))
+    Every row with a parseable sampler gains ``bytes_per_sample`` (the
+    output element width — the roofline's traffic model) and
+    ``gbytes_per_s`` (= GSample/s x bytes/sample), so bandwidth-bound
+    comparisons never re-derive dtype widths from row names.  Rows may
+    pre-set both (the service row's effective mixed-burst value).
+    """
+    if records is None:
+        return
+    g = kw.get("gsamples_per_s")
+    if g is not None and "bytes_per_sample" not in kw:
+        bps = bytes_per_sample(kw.get("sampler", ""),
+                               kw.get("dtype") or "float32")
+        if bps is not None:
+            kw["bytes_per_sample"] = bps
+            kw["gbytes_per_s"] = g * bps
+    records.append(kw)
 
 
 def _sampler_section(out, records, s: int, t: int, iters: int) -> None:
@@ -139,7 +129,8 @@ def _sampler_section(out, records, s: int, t: int, iters: int) -> None:
 def run(out, records=None):
     prev = None
     for s in (128, 512, 2048, 8192):
-        sec = time_fn(_bulk, s, T_STEPS, "ctr", iters=3)
+        st = time_fn_stats(_bulk, s, T_STEPS, "ctr", iters=3)
+        sec = st["median_s"]
         samples = s * T_STEPS
         gs = samples / sec / 1e9
         scale = f" x{gs / prev:.2f}" if prev else ""
@@ -148,16 +139,19 @@ def run(out, records=None):
                 f"{gs:.3f} GSample/s host{scale}"))
         _record(records, name=f"bulk/ctr/S={s}", backend="ref",
                 sampler="bits", dtype="uint32", variant="fused",
-                num_streams=s, num_steps=T_STEPS, us_per_call=sec * 1e6,
-                gsamples_per_s=gs)
+                num_streams=s, num_steps=T_STEPS,
+                us_per_call=st["us_per_call"],
+                compile_us=st["compile_us"], gsamples_per_s=gs)
     # faithful mode (serial xorshift decorrelator) at one size
-    sec = time_fn(_bulk, 512, T_STEPS, "faithful", iters=3)
+    st = time_fn_stats(_bulk, 512, T_STEPS, "faithful", iters=3)
+    sec = st["median_s"]
     gs = 512 * T_STEPS / sec / 1e9
     out(row("throughput/faithful/S=512", sec * 1e6,
             f"{gs:.3f} GSample/s host"))
     _record(records, name="bulk/faithful/S=512", backend="ref",
             sampler="bits", dtype="uint32", variant="fused",
-            num_streams=512, num_steps=T_STEPS, us_per_call=sec * 1e6,
+            num_streams=512, num_steps=T_STEPS,
+            us_per_call=st["us_per_call"], compile_us=st["compile_us"],
             gsamples_per_s=gs)
     # fmix32 decorrelator (beyond-paper; 96 -> 30 uint ops/sample)
     sec64 = time_fn(_bulk, 2048, T_STEPS, "ctr", iters=3)
@@ -284,8 +278,9 @@ def pipelined_smoke(out=print, records=None, *, s: int = 512, t: int = 2048,
     base = np.asarray(run_sync())
     assert np.array_equal(base, np.asarray(run_pipelined())), \
         "double-buffered blocks disagree with synchronous"
-    sec_s = time_fn(run_sync, iters=3, warmup=1)
-    sec_p = time_fn(run_pipelined, iters=3, warmup=1)
+    st_s = time_fn_stats(run_sync, iters=3, warmup=1)
+    st_p = time_fn_stats(run_pipelined, iters=3, warmup=1)
+    sec_s, sec_p = st_s["median_s"], st_p["median_s"]
     gs_s, gs_p = n / sec_s / 1e9, n / sec_p / 1e9
     out(row(f"pipelined/sync/S={s}", sec_s * 1e6,
             f"{gs_s:.3f} GSample/s lease+generate per block"))
@@ -294,12 +289,13 @@ def pipelined_smoke(out=print, records=None, *, s: int = 512, t: int = 2048,
     _record(records, name=f"pipelined/S={s}", backend="service",
             sampler="bits", dtype="uint32", variant="sync",
             num_streams=s, num_steps=t * n_blocks,
-            us_per_call=sec_s * 1e6, gsamples_per_s=gs_s)
+            us_per_call=st_s["us_per_call"], compile_us=st_s["compile_us"],
+            gsamples_per_s=gs_s)
     _record(records, name=f"pipelined/S={s}", backend="service",
             sampler="bits", dtype="uint32", variant="double_buffered",
             num_streams=s, num_steps=t * n_blocks,
-            us_per_call=sec_p * 1e6, gsamples_per_s=gs_p,
-            speedup_vs_two_pass=sec_s / sec_p)
+            us_per_call=st_p["us_per_call"], compile_us=st_p["compile_us"],
+            gsamples_per_s=gs_p, speedup_vs_two_pass=sec_s / sec_p)
 
     # 1-D vs 2-D mesh fan-out (degenerate single-device grids here; the
     # row exists so the TPU run records the real (hosts, streams) split)
@@ -358,6 +354,11 @@ def service_smoke(out=print, records=None, *, burst: int = 192,
     verify_ledger_disjoint(srv.block_service)
     srv.shutdown()
     rps = burst / wall
+    # mixed burst: effective bytes/sample from the actual responses
+    total_samples = sum(int(np.asarray(a).size) for a in got)
+    total_bytes = sum(int(np.asarray(a).nbytes) for a in got)
+    eff_bps = total_bytes / max(1, total_samples)
+    gs = total_samples / wall / 1e9
     out(row(f"service/burst={burst}", wall / burst * 1e6,
             f"{rps:.0f} req/s p50={stats['latency_p50_ms']:.1f}ms "
             f"p99={stats['latency_p99_ms']:.1f}ms "
@@ -367,6 +368,8 @@ def service_smoke(out=print, records=None, *, burst: int = 192,
             sampler="mixed", dtype="mixed", variant="coalesced+pool",
             num_streams=tenants, num_steps=burst,
             us_per_call=wall / burst * 1e6, compile_us=warm_s * 1e6,
+            gsamples_per_s=gs, bytes_per_sample=eff_bps,
+            gbytes_per_s=gs * eff_bps,
             requests_per_s=rps,
             latency_p50_ms=stats["latency_p50_ms"],
             latency_p99_ms=stats["latency_p99_ms"],

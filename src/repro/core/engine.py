@@ -257,6 +257,39 @@ def _faithful_tile_states(plan: GenPlan, block_t: int, n_tiles: int,
     return jnp.transpose(states, (0, 2, 1))  # (n_tiles, 4, S)
 
 
+def _faithful_states_at(plan: GenPlan, offsets) -> jnp.ndarray:
+    """(K, 4, S) xorshift start states at explicit per-tile offsets.
+
+    ``offsets`` is a non-decreasing list of static python ints, relative
+    to ``plan.ctr`` — the generalization of ``_faithful_tile_states``'s
+    uniform ``i * block_t`` stride that multi-window tiling needs (tile
+    (w, i) sits at ``w * window_len + i * bt``, which is monotone but
+    not uniform when the window length is not a tile multiple).
+    """
+    S = plan.num_streams
+    if plan.offset is not None:
+        tbl = xorshift.lane_table(S)
+        if plan.offset:
+            tbl = xorshift.jump_batch(tbl, plan.offset)
+        states = np.empty((len(offsets), 4, S), np.uint32)
+        at = 0
+        for i, off in enumerate(offsets):
+            if off != at:
+                tbl = xorshift.jump_batch(tbl, off - at)
+                at = off
+            states[i] = tbl.T
+        return jnp.asarray(states)
+    tbl = jnp.asarray(xorshift.lane_table(S))  # (S, 4)
+    offs = np.array([u64.split64(o) for o in offsets], np.uint32)
+
+    def tile(off_hi, off_lo):
+        nh, nl = u64.add64(plan.ctr, (off_hi, off_lo))
+        return xorshift.jump_traced(tbl, nh, nl)  # (S, 4)
+
+    states = jax.vmap(tile)(jnp.asarray(offs[:, 0]), jnp.asarray(offs[:, 1]))
+    return jnp.transpose(states, (0, 2, 1))  # (K, 4, S)
+
+
 def _leaf_permuted(roots: U64Pair, h: U64Pair) -> jnp.ndarray:
     """XSH_RR(root_t + h_s): (T,) roots x (S,) offsets -> (T, S) uint32."""
     leaf = u64.add64((roots[0][:, None], roots[1][:, None]),
@@ -461,6 +494,91 @@ def sample(plan: GenPlan, *, sampler: Optional[str] = None,
             out_dtype=plan.out_dtype if out_dtype is None else out_dtype)
     return generate(plan, backend=backend, block_t=block_t, block_s=block_s,
                     xs0=xs0)
+
+
+def shift_plan(plan: GenPlan, delta: int) -> GenPlan:
+    """The same plan ``delta`` counter steps later (window ``[ctr+delta,
+    ctr+delta+T)``).  Static offsets stay static; traced counters get a
+    traced add — either way the shifted plan is bit-identical to leasing
+    the later window directly.
+    """
+    delta = int(delta)
+    d_hi, d_lo = (u64.to_u32(v) for v in u64.const64(delta))
+    return dataclasses.replace(
+        plan, ctr=u64.add64(plan.ctr, (d_hi, d_lo)),
+        offset=None if plan.offset is None else plan.offset + delta)
+
+
+def generate_windows(plan: GenPlan, num_windows: int, *,
+                     backend: Optional[str] = None,
+                     block_t: int = DEFAULT_BLOCK_T,
+                     block_s: int = DEFAULT_BLOCK_S) -> jnp.ndarray:
+    """(W, T, S) stack of W *consecutive* counter windows of ``plan``.
+
+    Window ``w`` covers counter steps ``[ctr + w*T, ctr + (w+1)*T)`` —
+    bit-identical on every backend to stacking W ``generate`` calls on
+    ``shift_plan(plan, w*T)``, but dispatched as ONE device program:
+
+      * ``"ref"``     literally the stacked loop (the oracle),
+      * ``"xla"``     one fused (W*T, S) generation reshaped to windows
+                      (counter addressing makes consecutive windows one
+                      contiguous block),
+      * ``"pallas"``  one ``pallas_call`` whose grid grows a leading
+                      window axis — W windows cost one kernel launch
+                      (``thundering_block.block_ctr_windows``).
+
+    This is the dispatch-amortization lever of the roofline chase: a
+    standing producer that fuses W windows per call pays the per-call
+    jit/launch overhead once per W blocks (``BlockProducer(fuse=W)``).
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.core import engine
+        >>> plan = engine.make_plan(seed=7, num_streams=4, num_steps=6)
+        >>> stack = engine.generate_windows(plan, 3, backend="xla")
+        >>> stack.shape                          # (W, T, S)
+        (3, 6, 4)
+        >>> w2 = engine.generate(engine.shift_plan(plan, 12), backend="xla")
+        >>> bool(np.array_equal(np.asarray(stack[2]), np.asarray(w2)))
+        True
+    """
+    _validate_plan(plan)
+    W = int(num_windows)
+    if W < 1:
+        raise ValueError(f"num_windows must be >= 1, got {num_windows}")
+    T, S = plan.shape
+    name = backend or select_backend(plan)
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; have {available_backends()}")
+    if name == "ref":
+        return jnp.stack([generate(shift_plan(plan, w * T), backend="ref",
+                                   block_t=block_t, block_s=block_s)
+                          for w in range(W)])
+    if name == "xla":
+        wide = dataclasses.replace(plan, num_steps=W * T)
+        out = generate(wide, backend="xla", block_t=block_t,
+                       block_s=block_s)
+        return out.reshape(W, T, S)
+    from repro.kernels import thundering_block as _tb
+    spec = sampler_mod.parse(plan.sampler)
+    roots, ctr_rows = root_and_ctr_rows(plan.x0, plan.ctr, W * T)
+    if plan.mode == "ctr":
+        return _tb.block_ctr_windows(
+            roots, ctr_rows, plan.h, num_windows=W, window_len=T,
+            block_t=block_t, block_s=block_s, interpret=use_interpret(),
+            deco=plan.deco, sampler=spec, out_dtype=plan.out_dtype)
+    if plan.mode == "faithful":
+        bt = _tb.tile_t(block_t, T,
+                        sampler_mod.result_dtype(spec, plan.out_dtype))
+        n_t = -(-_pad_to(T, bt) // bt)
+        states = _faithful_states_at(
+            plan, [w * T + i * bt for w in range(W) for i in range(n_t)])
+        return _tb.block_faithful_windows(
+            roots, plan.h, states, num_windows=W, window_len=T,
+            block_t=bt, block_s=block_s, interpret=use_interpret(),
+            sampler=spec, out_dtype=plan.out_dtype)
+    raise ValueError(f"unknown mode {plan.mode!r}")
 
 
 def generate_flat(plan: GenPlan, *, backend: Optional[str] = None,

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import functools
 import hashlib
 import queue
 import threading
@@ -47,9 +48,30 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine, stream as tstream, u64
+from repro.core import engine, sampler as sampler_mod, stream as tstream, u64
 
 _M64 = (1 << 64) - 1
+
+
+@functools.lru_cache(maxsize=None)
+def donation_supported() -> bool:
+    """True if ``jit(..., donate_argnums=...)`` actually aliases here.
+
+    Empirical, not a platform table: donate a buffer into a jitted
+    full-overwrite and see whether the runtime deleted the input.  On
+    platforms where donation is a no-op jax only warns, the input stays
+    live, and the donated producer ring would silently degrade to fresh
+    allocations — callers use this to skip/flag rather than pretend.
+    """
+    import warnings
+    probe = jax.jit(
+        lambda x: jax.lax.dynamic_update_slice(x, x + jnp.uint32(1), (0,)),
+        donate_argnums=(0,))
+    x = jnp.zeros((8,), jnp.uint32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        probe(x).block_until_ready()
+    return x.is_deleted()
 
 
 class LeaseError(ValueError):
@@ -306,6 +328,44 @@ class BlockService:
             led.reserve(lo, hi)
         return Lease(channel=name, lo=lo, hi=hi, service=self)
 
+    def lease_many(self, name: str, length: int, n: int, *,
+                   at: Optional[int] = None) -> List[Lease]:
+        """``n`` CONTIGUOUS equal-length windows, reserved atomically.
+
+        All-or-nothing under one lock acquisition: either every window
+        ``[lo0 + i*length, lo0 + (i+1)*length)`` is reserved or none is
+        (an explicit ``at`` that clashes partway rolls back and raises).
+        This is the fused producer's lease shape — one
+        ``generate_windows`` dispatch covers all ``n`` windows, but each
+        window keeps its own lease so commit-at-handoff accounting stays
+        per-block exact.
+        """
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        if length <= 0:
+            raise ValueError(f"lease length must be positive, got {length}")
+        if name not in self._channels:
+            raise KeyError(f"channel {name!r} is not open; "
+                           f"have {sorted(self._channels)}")
+        with self._lock:
+            led = self._ledgers[name]
+            lo0 = led.next if at is None else int(at)
+            if lo0 + n * length > _M64:
+                raise LeaseError(f"window [{lo0}, {lo0 + n * length}) "
+                                 f"exceeds the u64 counter space")
+            done: List[Tuple[int, int]] = []
+            try:
+                for i in range(n):
+                    lo = lo0 + i * length
+                    led.reserve(lo, lo + length)
+                    done.append((lo, lo + length))
+            except LeaseError:
+                for lo, hi in done:
+                    led.release(lo, hi)
+                raise
+        return [Lease(channel=name, lo=lo, hi=hi, service=self)
+                for lo, hi in done]
+
     def commit(self, lease: Lease) -> None:
         """Move a reserved window into the durable (checkpointable) ledger."""
         with self._lock:
@@ -365,14 +425,38 @@ class BlockService:
         return tstream.advance(tstream.derive(fam, column), lease.lo)
 
     def _window_fn(self, ch: Channel, length: int, sampler: str,
-                   out_dtype: str) -> Callable:
-        """One jitted fn(ctr_hi, ctr_lo) -> (length, S) block per shape.
+                   out_dtype: str, *, fuse: int = 1,
+                   donate: bool = False) -> Callable:
+        """One jitted window executable per (channel, shape, variant).
 
         The counter is TRACED (plan.offset=None), so every equal-length
         lease of a channel reuses one executable; traced and static
         counters are bit-identical by the engine's parity tests.
+
+        Variants (cache-keyed alongside the shape):
+
+          * ``fuse=1, donate=False`` — ``fn(hi, lo) -> (L, S)``.
+          * ``fuse=W``               — ``fn(hi, lo) -> (W, L, S)``, one
+            ``engine.generate_windows`` dispatch for W windows.
+          * ``donate=True``          — ``fn(hi, lo, retired)`` with
+            ``donate_argnums=(2,)``: the retiring block is overwritten
+            in place (``dynamic_update_slice`` over the full shape, so
+            the values are exactly the fresh block's) and XLA reuses its
+            allocation instead of allocating per window.  The donated
+            arg MUST participate in the computation or XLA prunes it
+            and silently drops the aliasing — hence update, not ignore.
+
+        ``fuse>1``/``donate`` require ``mesh=None`` (the sharded path
+        manages its own output layout).
         """
-        key = (ch.name, length, sampler, out_dtype)
+        fuse = int(fuse)
+        if fuse < 1:
+            raise ValueError(f"fuse must be >= 1, got {fuse}")
+        if (fuse > 1 or donate) and self.mesh is not None:
+            raise ValueError("fused/donated window functions require "
+                             "mesh=None; sharded delivery manages its own "
+                             "output buffers")
+        key = (ch.name, length, sampler, out_dtype, fuse, donate)
         fn = self._window_fns.get(key)
         if fn is not None:
             return fn
@@ -382,12 +466,15 @@ class BlockService:
         block_t, block_s = self.block_t, self.block_s
         mode, deco = ch.mode, ch.deco
 
-        @jax.jit
-        def window(ctr_hi, ctr_lo):
+        def compute(ctr_hi, ctr_lo):
             plan = engine.GenPlan(
                 x0=x0, h=h, num_steps=length, ctr=(ctr_hi, ctr_lo),
                 offset=None, mode=mode, deco=deco, sampler=sampler,
                 out_dtype=out_dtype)
+            if fuse > 1:
+                return engine.generate_windows(
+                    plan, fuse, backend=backend, block_t=block_t,
+                    block_s=block_s)
             if mesh is not None:
                 return engine.generate_sharded(
                     plan, mesh=mesh, axis_names=axes, backend=backend,
@@ -395,25 +482,94 @@ class BlockService:
             return engine.generate(plan, backend=backend, block_t=block_t,
                                    block_s=block_s)
 
+        if donate:
+            @functools.partial(jax.jit, donate_argnums=(2,))
+            def window(ctr_hi, ctr_lo, retired):
+                block = compute(ctr_hi, ctr_lo)
+                return jax.lax.dynamic_update_slice(
+                    retired, block, (0,) * block.ndim)
+        else:
+            window = jax.jit(compute)
+
         self._window_fns[key] = window
         return window
 
+    def _ctr_args(self, lo: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        c_hi, c_lo = (u64.to_u32(v) for v in u64.const64(lo))
+        return jnp.asarray(c_hi), jnp.asarray(c_lo)
+
     def generate(self, lease: Lease, *, sampler: Optional[str] = None,
-                 out_dtype: Optional[str] = None) -> Any:
+                 out_dtype: Optional[str] = None,
+                 retired: Any = None) -> Any:
         """The block for a leased window (dispatched, not waited on).
 
         Plan channels return the ``(length, S)`` engine block with the
         channel's (or overridden) sampler stage; custom channels return
-        ``window_fn(lo, hi)``.
+        ``window_fn(lo, hi)``.  Passing ``retired`` — a live jax array
+        of the output's exact shape and dtype, typically the block the
+        consumer just finished with — DONATES it: the result is
+        bit-identical but reuses the retired block's allocation, and
+        the retired array is deleted (donated producer ring).
         """
         ch = self._channels[lease.channel]
         if ch.window_fn is not None:
+            if retired is not None:
+                raise ValueError(f"channel {lease.channel!r} has a custom "
+                                 f"window_fn; donation needs a plan channel")
             return ch.window_fn(lease.lo, lease.hi)
         s = ch.sampler if sampler is None else sampler
         d = ch.out_dtype if out_dtype is None else out_dtype
-        fn = self._window_fn(ch, lease.length, s, d)
-        c_hi, c_lo = (u64.to_u32(v) for v in u64.const64(lease.lo))
-        return fn(jnp.asarray(c_hi), jnp.asarray(c_lo))
+        fn = self._window_fn(ch, lease.length, s, d,
+                             donate=retired is not None)
+        args = self._ctr_args(lease.lo)
+        if retired is not None:
+            return fn(*args, retired)
+        return fn(*args)
+
+    def generate_many(self, leases: List[Lease], *,
+                      sampler: Optional[str] = None,
+                      out_dtype: Optional[str] = None,
+                      retired: Any = None) -> Any:
+        """(W, L, S) stack for W contiguous leases — ONE fused dispatch.
+
+        The leases must be what ``lease_many`` hands out: same plan
+        channel, equal length, back-to-back windows.  The stack is
+        bit-identical to per-lease ``generate`` calls (the engine's
+        ``generate_windows`` parity guarantee) but pays the dispatch
+        path once.  ``retired`` donates a (W, L, S) stack as in
+        ``generate``.
+        """
+        if not leases:
+            raise ValueError("generate_many needs at least one lease")
+        ch = self._channels[leases[0].channel]
+        if ch.window_fn is not None:
+            raise ValueError(f"channel {leases[0].channel!r} has a custom "
+                             f"window_fn; fused generation needs a plan "
+                             f"channel")
+        L = leases[0].length
+        for a, b in zip(leases, leases[1:]):
+            if b.channel != a.channel or b.length != L or b.lo != a.hi:
+                raise ValueError(
+                    "generate_many needs contiguous equal-length leases of "
+                    f"one channel; got [{a.lo},{a.hi}) then [{b.lo},{b.hi}) "
+                    f"on {a.channel!r}/{b.channel!r}")
+        s = ch.sampler if sampler is None else sampler
+        d = ch.out_dtype if out_dtype is None else out_dtype
+        if len(leases) == 1:
+            # the fuse=1 window fn emits (L, S); keep the documented
+            # (W, L, S) contract.  Donation of a 1-window stack would
+            # alias the wrong shape — the plain path covers it.
+            if retired is not None:
+                raise ValueError("donating into a single-window stack is "
+                                 "not supported; use generate(lease, "
+                                 "retired=...) for W=1")
+            return self.generate(leases[0], sampler=s, out_dtype=d)[None]
+        fn = self._window_fn(ch, L, s, d, fuse=len(leases),
+                             donate=retired is not None)
+        args = self._ctr_args(leases[0].lo)
+        if retired is not None:
+            return fn(*args, retired)
+        return fn(*args)
 
     def take(self, name: str, length: int, **kw) -> Any:
         """lease + generate + commit in one call (synchronous consumers)."""
@@ -428,16 +584,25 @@ class BlockService:
 
     def producer(self, name: str, block_len: int, *, depth: int = 1,
                  count: Optional[int] = None, start: Optional[int] = None,
-                 **gen_kw) -> "BlockProducer":
+                 donate: bool = False, fuse: int = 1,
+                 check_ring: bool = False, **gen_kw) -> "BlockProducer":
         """Double-buffered producer over successive leased windows.
 
         ``start`` pins the first window to ``[start, start + block_len)``
         (explicit ``at=`` leases) — the repositioning hook for resume:
         windows already committed beyond ``start`` raise ``LeaseError``
         unless the ledger was rewound first.
+
+        ``donate=True`` runs the allocation-free steady state: blocks
+        cycle through a fixed ring of pre-allocated buffers (see
+        ``BlockProducer``).  ``fuse=W`` generates W windows per device
+        dispatch via ``generate_windows``.  ``check_ring=True`` asserts
+        every donated block's ``unsafe_buffer_pointer()`` stays inside
+        the ring (debug aid — forces a sync per block).
         """
         return BlockProducer(self, name, block_len, depth=depth,
-                             count=count, start=start, **gen_kw)
+                             count=count, start=start, donate=donate,
+                             fuse=fuse, check_ring=check_ring, **gen_kw)
 
 
 # ---------------------------------------------------------------------------
@@ -456,6 +621,28 @@ class BlockProducer:
     COMMITS its lease (consumed randomness enters the durable ledger at
     handoff, so a ledger snapshot between iterations is exact).
 
+    Two roofline levers ride on top of the base pipeline:
+
+      * ``donate=True`` — the allocation-free steady state.  The
+        producer pre-allocates a ring of ``depth + 2`` buffers (queue
+        depth + the consumer's live block + the one being generated)
+        and every window is generated INTO a retiring ring buffer via a
+        donated jit (``donate_argnums``), so XLA reuses the allocation
+        instead of allocating per window.  Bit-identity with the
+        non-donated path is structural (the donated fn full-overwrites
+        the retired buffer with the fresh block).  The contract: a
+        yielded block is valid only until the NEXT ``__next__`` call —
+        fetching block ``k+1`` retires block ``k`` into the ring (copy
+        out with ``np.array`` if you need it longer).
+      * ``fuse=W`` — W windows per dispatch.  The thread leases W
+        contiguous windows atomically (``lease_many``), generates their
+        ``(W, L, S)`` stack with ONE fused ``generate_windows`` call,
+        and enqueues per-window slices; commit stays per-block at
+        handoff.  With ``donate=True`` the stacks alternate through a
+        producer-local two-buffer ring (the enqueued slices are fresh
+        arrays, so the consumer never touches ring memory and no
+        validity window applies).
+
     Example:
         >>> from repro.runtime.blocks import BlockService
         >>> svc = BlockService(seed=11)
@@ -464,50 +651,144 @@ class BlockProducer:
         ...     shapes = [blk.shape for _, blk in prod]
         >>> shapes
         [(4, 2), (4, 2)]
+        >>> with svc.producer("docs/demo", 4, count=4, fuse=2) as prod:
+        ...     lows = [lease.lo for lease, _ in prod]
+        >>> lows                               # fused leases stay per-window
+        [8, 12, 16, 20]
     """
 
     def __init__(self, service: BlockService, name: str, block_len: int, *,
                  depth: int = 1, count: Optional[int] = None,
-                 start: Optional[int] = None, **gen_kw):
+                 start: Optional[int] = None, donate: bool = False,
+                 fuse: int = 1, check_ring: bool = False, **gen_kw):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
+        fuse = int(fuse)
+        if fuse < 1:
+            raise ValueError(f"fuse must be >= 1, got {fuse}")
+        if (donate or fuse > 1) and service.mesh is not None:
+            raise ValueError("donate/fuse producers require a mesh-less "
+                             "service; sharded delivery manages its own "
+                             "buffers")
+        if donate and not donation_supported():
+            raise ValueError(
+                f"buffer donation is a no-op on backend "
+                f"{jax.default_backend()!r}; run without donate=True")
         self._service = service
         self._name = name
         self._block_len = block_len
         self._count = count
         self._pos = start
+        self._donate = donate
+        self._fuse = fuse
+        self._check_ring = check_ring
         self._gen_kw = gen_kw
         self._queue: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._recycle: "queue.Queue" = queue.Queue()
+        self._ring_ptrs: set = set()
+        self._held: Any = None
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
         self._produced = 0
+        if donate:
+            ch = service.channel(name)
+            if ch.window_fn is not None:
+                raise ValueError(f"channel {name!r} has a custom window_fn; "
+                                 f"donation needs a plan channel")
+            s = gen_kw.get("sampler") or ch.sampler
+            d = gen_kw.get("out_dtype") or ch.out_dtype
+            dtype = sampler_mod.result_dtype(sampler_mod.parse(s), d)
+            shape = ((block_len, ch.num_streams) if fuse == 1
+                     else (fuse, block_len, ch.num_streams))
+            # fuse>1: stacks never leave the thread -> 2 buffers alternate;
+            # fuse=1: queue depth + consumer's live block + in-flight gen.
+            for _ in range(2 if fuse > 1 else depth + 2):
+                buf = jnp.zeros(shape, dtype)
+                if check_ring:  # pointer reads sync; debug mode only
+                    self._ring_ptrs.add(buf.unsafe_buffer_pointer())
+                self._recycle.put(buf)
         self._thread = threading.Thread(
             target=self._work, name=f"blocks:{name}", daemon=True)
         self._thread.start()
+
+    def _get_retired(self) -> Any:
+        """Next free ring buffer (None once stop is requested)."""
+        while not self._stop.is_set():
+            try:
+                return self._recycle.get(timeout=0.1)
+            except queue.Empty:
+                continue
+        return None
+
+    def _put(self, item) -> bool:
+        """queue.put with stop-polling; False once stop is requested."""
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def _work(self) -> None:
         try:
             while not self._stop.is_set():
                 if self._count is not None and self._produced >= self._count:
                     break
-                lease = self._service.lease(self._name, self._block_len,
-                                            at=self._pos)
+                n = self._fuse
+                if self._count is not None:
+                    n = min(n, self._count - self._produced)
+                leases = self._service.lease_many(
+                    self._name, self._block_len, n, at=self._pos)
                 if self._pos is not None:
-                    self._pos += self._block_len
-                try:
-                    block = self._service.generate(lease, **self._gen_kw)
-                except BaseException:
-                    self._service.release(lease)
-                    raise
-                self._produced += 1
-                while not self._stop.is_set():
-                    try:
-                        self._queue.put((lease, block), timeout=0.1)
+                    self._pos += n * self._block_len
+                # A short tail (n < fuse) has the wrong stack shape for
+                # the ring -> generate it undonated.
+                retired = None
+                if self._donate and n == self._fuse:
+                    retired = self._get_retired()
+                    if retired is None:  # stopping
+                        for lease in leases:
+                            self._service.release(lease)
                         break
-                    except queue.Full:
-                        continue
-                else:
-                    self._service.release(lease)
+                try:
+                    if n == 1 and self._fuse == 1:
+                        block = self._service.generate(
+                            leases[0], retired=retired, **self._gen_kw)
+                        pairs = [(leases[0], block)]
+                        ring_out = block
+                    else:
+                        stack = self._service.generate_many(
+                            leases, retired=retired, **self._gen_kw)
+                        pairs = [(leases[w], stack[w]) for w in range(n)]
+                        ring_out = stack
+                        if retired is not None:
+                            # slices are fresh arrays; the stack cycles
+                            # producer-locally
+                            self._recycle.put(stack)
+                except BaseException:
+                    if retired is not None and not retired.is_deleted():
+                        self._recycle.put(retired)
+                    for lease in leases:
+                        self._service.release(lease)
+                    raise
+                if self._check_ring and retired is not None:
+                    ptr = ring_out.unsafe_buffer_pointer()
+                    if ptr not in self._ring_ptrs:
+                        raise AssertionError(
+                            f"donated block escaped the buffer ring: "
+                            f"{ptr:#x} not in "
+                            f"{sorted(map(hex, self._ring_ptrs))}")
+                self._produced += n
+                stopped = False
+                for idx, pair in enumerate(pairs):
+                    if not self._put(pair):
+                        for lease, _ in pairs[idx:]:
+                            self._service.release(lease)
+                        stopped = True
+                        break
+                if stopped:
+                    break
         except BaseException as e:  # surface in the consumer thread
             self._error = e
         finally:
@@ -537,6 +818,10 @@ class BlockProducer:
                 raise StopIteration
             lease, block = item
             self._service.commit(lease)
+            if self._donate and self._fuse == 1:
+                if self._held is not None:
+                    self._recycle.put(self._held)  # retire block k
+                self._held = block
             return lease, block
 
     def close(self) -> None:

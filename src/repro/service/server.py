@@ -67,6 +67,8 @@ class ServerConfig:
     pool_rows: int = 1024
     pool_cols: int = 64
     pool_depth: int = 2
+    pool_donate: bool = True
+    pool_fuse: int = 1
     default_quota: Optional[int] = None
 
 
@@ -82,13 +84,18 @@ class _Pool:
     current pre-generated block.  Dispatcher-thread only (no locks)."""
 
     def __init__(self, service: blocks.BlockService, sampler: str,
-                 out_dtype: str, *, rows: int, cols: int, depth: int):
+                 out_dtype: str, *, rows: int, cols: int, depth: int,
+                 donate: bool = False, fuse: int = 1):
         self.sampler, self.out_dtype = sampler, out_dtype
         self.channel = pool_channel(sampler, out_dtype)
         self.rows, self.cols = rows, cols
+        # donation is an optimisation, never a requirement: fall back to
+        # plain allocation where the runtime can't alias
+        self.donate = donate and blocks.donation_supported()
         service.open(self.channel, num_streams=cols, sampler=sampler,
                      out_dtype=out_dtype)
-        self._producer = service.producer(self.channel, rows, depth=depth)
+        self._producer = service.producer(self.channel, rows, depth=depth,
+                                          donate=self.donate, fuse=fuse)
         self._lease: Optional[blocks.Lease] = None
         self._block: Optional[np.ndarray] = None
         self._col = 0
@@ -109,7 +116,10 @@ class _Pool:
             # leftover columns are discarded, never served twice: the
             # lease stays committed (fenced) either way
             self._lease, blk = next(self._producer)
-            self._block = np.asarray(blk)
+            # donated blocks are valid only until the next producer pull,
+            # and np.asarray of a CPU jax array may be a zero-copy view of
+            # ring memory the next window will overwrite — force a copy.
+            self._block = np.array(blk) if self.donate else np.asarray(blk)
             self._col = 0
             self.blocks_consumed += 1
             fresh = True
@@ -164,7 +174,9 @@ class RandServer:
             self._pools[(sampler, out_dtype)] = _Pool(
                 self.block_service, sampler, out_dtype,
                 rows=self.config.pool_rows, cols=self.config.pool_cols,
-                depth=self.config.pool_depth)
+                depth=self.config.pool_depth,
+                donate=self.config.pool_donate,
+                fuse=self.config.pool_fuse)
         self._queue: "queue.Queue" = queue.Queue(
             maxsize=self.config.queue_depth)
         self._closed = threading.Event()

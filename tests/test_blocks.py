@@ -241,6 +241,200 @@ def test_producer_custom_window_fn_channel():
 
 
 # ---------------------------------------------------------------------------
+# deep pipelines, donated buffer rings, fused multi-window producers
+# ---------------------------------------------------------------------------
+
+needs_donation = pytest.mark.skipif(
+    not blocks_mod.donation_supported(),
+    reason="jit buffer donation is a no-op on this backend")
+
+
+def _take_blocks(svc, name, length, n, **kw):
+    return [np.array(svc.take(name, length, **kw)) for _ in range(n)]
+
+
+def test_deep_producer_ordering_and_bit_identity():
+    ref_svc = BlockService(seed=13)
+    ref_svc.open("p", num_streams=8)
+    ref = _take_blocks(ref_svc, "p", 16, 6)
+    svc = BlockService(seed=13)
+    svc.open("p", num_streams=8)
+    with svc.producer("p", 16, count=6, depth=3) as prod:
+        got = [(lease.lo, np.array(blk)) for lease, blk in prod]
+    assert [lo for lo, _ in got] == [0, 16, 32, 48, 64, 80]
+    for (_, blk), expect in zip(got, ref):
+        assert np.array_equal(blk, expect)
+
+
+def test_deep_producer_backpressure_bounds_prefetch():
+    """A lagging consumer never lets the producer run away: in-flight
+    windows are bounded by queue depth + the block being generated."""
+    import time
+    depth = 3
+    svc = BlockService(seed=13)
+    svc.open("p", num_streams=4)
+    with svc.producer("p", 8, depth=depth) as prod:
+        next(prod)                     # slow consumer: take one, then idle
+        time.sleep(0.5)                # let the producer fill the queue
+        state = svc.ledger_state()["channels"]["p"]["committed"]
+        assert state == [[0, 8]]       # nothing else committed
+        # reservations = queue (depth) + at most one being generated +
+        # one put-blocked: a fresh lease lands within that bound
+        nxt = svc.lease("p", 8)
+        assert nxt.lo <= 8 * (1 + depth + 2)
+
+
+def test_deep_producer_stop_mid_queue_drains_reservations():
+    svc = BlockService(seed=13)
+    svc.open("p", num_streams=4)
+    prod = svc.producer("p", 8, depth=4)
+    next(prod)
+    next(prod)
+    prod.close()                       # queue still holds blocks
+    assert svc.ledger_state()["channels"]["p"]["committed"] == [[0, 16]]
+    # every undelivered reservation was released: [16, 24) is free again
+    lease = svc.lease("p", 8, at=16)
+    assert (lease.lo, lease.hi) == (16, 24)
+
+
+@needs_donation
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_donated_producer_bit_identical_to_plain(depth):
+    ref_svc = BlockService(seed=17)
+    ref_svc.open("p", num_streams=8, sampler="uniform")
+    ref = _take_blocks(ref_svc, "p", 16, 6)
+    svc = BlockService(seed=17)
+    svc.open("p", num_streams=8, sampler="uniform")
+    with svc.producer("p", 16, count=6, depth=depth, donate=True,
+                      check_ring=True) as prod:
+        # donated contract: a block is valid only until the next pull
+        got = [np.array(blk) for _, blk in prod]
+    assert len(got) == 6
+    for blk, expect in zip(got, ref):
+        assert np.array_equal(blk, expect)
+
+
+@needs_donation
+def test_donated_producer_reuses_ring_buffers():
+    """Zero-copy steady state: every block the ring yields lives at one
+    of depth + 2 pre-allocated addresses."""
+    depth, n = 2, 12
+    svc = BlockService(seed=17)
+    svc.open("p", num_streams=4)
+    ptrs = set()
+    with svc.producer("p", 8, count=n, depth=depth, donate=True,
+                      check_ring=True) as prod:
+        for _, blk in prod:
+            blk.block_until_ready()
+            ptrs.add(blk.unsafe_buffer_pointer())
+    assert 1 < len(ptrs) <= depth + 2
+
+
+def test_donated_producer_refused_where_unsupported(monkeypatch):
+    svc = BlockService(seed=17)
+    svc.open("p", num_streams=4)
+    monkeypatch.setattr(blocks_mod, "donation_supported", lambda: False)
+    with pytest.raises(ValueError, match="donation"):
+        svc.producer("p", 8, donate=True)
+
+
+def test_fused_producer_bit_identical_with_per_window_commits():
+    ref_svc = BlockService(seed=19)
+    ref_svc.open("p", num_streams=8)
+    ref = _take_blocks(ref_svc, "p", 12, 6)
+    svc = BlockService(seed=19)
+    svc.open("p", num_streams=8)
+    with svc.producer("p", 12, count=6, fuse=4) as prod:  # 6 = 4 + 2 tail
+        got = [(lease, np.array(blk)) for lease, blk in prod]
+    assert [lease.lo for lease, _ in got] == [0, 12, 24, 36, 48, 60]
+    for (_, blk), expect in zip(got, ref):
+        assert np.array_equal(blk, expect)
+    assert svc.ledger_state()["channels"]["p"]["committed"] == [[0, 72]]
+
+
+def test_fused_producer_single_window_tail():
+    """count % fuse == 1: the one-lease tail batch must still yield a
+    full (L, S) window, not a slice of it."""
+    ref_svc = BlockService(seed=19)
+    ref_svc.open("p", num_streams=8)
+    ref = _take_blocks(ref_svc, "p", 12, 7)
+    svc = BlockService(seed=19)
+    svc.open("p", num_streams=8)
+    with svc.producer("p", 12, count=7, fuse=2) as prod:  # 7 = 3x2 + 1 tail
+        got = [np.array(blk) for _, blk in prod]
+    assert [g.shape for g in got] == [(12, 8)] * 7
+    for blk, expect in zip(got, ref):
+        assert np.array_equal(blk, expect)
+
+
+@needs_donation
+def test_fused_donated_producer_bit_identical():
+    ref_svc = BlockService(seed=19)
+    ref_svc.open("p", num_streams=8, sampler="uniform", out_dtype="bfloat16")
+    ref = _take_blocks(ref_svc, "p", 16, 8)
+    svc = BlockService(seed=19)
+    svc.open("p", num_streams=8, sampler="uniform", out_dtype="bfloat16")
+    with svc.producer("p", 16, count=8, fuse=2, donate=True,
+                      check_ring=True) as prod:
+        got = [np.array(blk) for _, blk in prod]
+    for blk, expect in zip(got, ref):
+        assert np.array_equal(blk.view(np.uint16), expect.view(np.uint16))
+
+
+def test_lease_many_contiguous_and_atomic():
+    svc = BlockService(seed=23)
+    svc.open("a", num_streams=2)
+    leases = svc.lease_many("a", 8, 3)
+    assert [(l.lo, l.hi) for l in leases] == [(0, 8), (8, 16), (16, 24)]
+    svc.commit(svc.lease("a", 8, at=40))   # block the middle of the next run
+    with pytest.raises(LeaseError, match="overlaps"):
+        svc.lease_many("a", 8, 4, at=24)   # [40, 48) clashes on window 3
+    # all-or-nothing: the windows before the clash were rolled back
+    ok = svc.lease("a", 16, at=24)
+    assert (ok.lo, ok.hi) == (24, 40)
+
+
+def test_generate_many_matches_per_lease_generate():
+    svc = BlockService(seed=23)
+    svc.open("a", num_streams=8)
+    leases = svc.lease_many("a", 16, 3)
+    stack = np.asarray(svc.generate_many(leases))
+    assert stack.shape == (3, 16, 8)
+    for w, lease in enumerate(leases):
+        assert np.array_equal(stack[w], np.asarray(svc.generate(lease)))
+    solo = svc.lease("a", 16)
+    one = np.asarray(svc.generate_many([solo]))
+    assert one.shape == (1, 16, 8)
+    assert np.array_equal(one[0], np.asarray(svc.generate(solo)))
+    with pytest.raises(ValueError, match="single-window"):
+        svc.generate_many([solo], retired=jnp.zeros((1, 16, 8), jnp.uint32))
+
+
+def test_generate_many_rejects_gaps_and_mixed_lengths():
+    svc = BlockService(seed=23)
+    svc.open("a", num_streams=4)
+    l1 = svc.lease("a", 8)
+    svc.lease("a", 8)                       # consumed to create a gap
+    l3 = svc.lease("a", 8)
+    with pytest.raises(ValueError, match="contiguous"):
+        svc.generate_many([l1, l3])
+    l4 = svc.lease("a", 4)
+    with pytest.raises(ValueError, match="contiguous"):
+        svc.generate_many([l3, l4])
+
+
+def test_donate_and_fuse_require_meshless_service():
+    devs = np.array(jax.devices())
+    mesh = jax.sharding.Mesh(devs, ("streams",))
+    svc = BlockService(seed=23, mesh=mesh)
+    svc.open("a", num_streams=4)
+    with pytest.raises(ValueError, match="mesh"):
+        svc.producer("a", 8, fuse=2)
+    with pytest.raises(ValueError, match="mesh"):
+        svc.producer("a", 8, donate=True)
+
+
+# ---------------------------------------------------------------------------
 # BlockService-fed training: bit-identity + mid-epoch resume
 # ---------------------------------------------------------------------------
 

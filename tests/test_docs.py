@@ -26,6 +26,8 @@ PUBLIC_SYMBOLS = [
     engine.generate,
     engine.generate_flat,
     engine.generate_sharded,
+    engine.generate_windows,
+    engine.shift_plan,
     engine.sample,
     engine.family_from_seed,
     engine.derive_leaf,
@@ -47,11 +49,13 @@ PUBLIC_SYMBOLS = [
     blocks.BlockService,
     blocks.BlockService.open,
     blocks.BlockService.lease,
+    blocks.BlockService.lease_many,
     blocks.BlockService.commit,
     blocks.BlockService.release,
     blocks.BlockService.ledger_state,
     blocks.BlockService.restore_ledger,
     blocks.BlockService.generate,
+    blocks.BlockService.generate_many,
     blocks.BlockService.take,
     blocks.BlockService.producer,
     blocks.Lease,
@@ -75,6 +79,7 @@ PUBLIC_SYMBOLS = [
 #: symbols whose docstring must include a runnable ``>>>`` example
 EXAMPLE_BEARING = [
     engine.GenPlan, engine.generate, engine.generate_sharded,
+    engine.generate_windows,
     engine.sample,
     stream.ThunderStream, stream.new_stream, stream.derive, stream.split,
     stream.advance, stream.random_bits, stream.uniforms, stream.normals,

@@ -379,6 +379,30 @@ def test_pool_serves_hot_class_with_replay_parity():
     assert pool_wins, "pool windows must be journaled"
 
 
+def test_pool_donation_serves_identical_responses():
+    """The donated standing pool (and its fused variant) must be
+    response-for-response byte-identical to the plain pool: donation
+    only changes WHERE blocks are written, never what they hold."""
+    def burst(donate, fuse=1):
+        cfg = ServerConfig(max_batch=8, max_delay_s=0.05, pool_rows=64,
+                           pool_cols=8, pool_depth=2, pool_donate=donate,
+                           pool_fuse=fuse,
+                           hot_classes=(("uniform", "float32"),))
+        with RandServer(41, config=cfg) as srv:
+            reqs = [RandRequest("t/don", (40 + i,), "uniform", "float32",
+                                rid=f"d{i}") for i in range(24)]
+            got = run_burst(srv, reqs)
+            assert srv.stats()["pool_requests"] == 24
+            verify_ledger_disjoint(srv.block_service)
+        return got
+
+    plain = burst(donate=False)
+    for tag, got in (("donated", burst(donate=True)),
+                     ("donated+fused", burst(donate=True, fuse=2))):
+        for rid in plain:
+            assert _bytes_equal(plain[rid], got[rid]), (tag, rid)
+
+
 def test_mid_request_crash_torn_journal_replays(tmp_path):
     """Kill mid-write: truncate the journal to a torn final line — every
     COMPLETE record must still replay bit-identically."""
