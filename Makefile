@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke install-dev service service-smoke roofline roofline-full
+.PHONY: test test-fast bench bench-smoke install-dev service service-smoke fleet fleet-smoke roofline roofline-full
 
 install-dev:
 	$(PY) -m pip install -e ".[test]"
@@ -23,6 +23,14 @@ service:           ## RandService: 1024-tenant burst + replay check, then serve 
 
 service-smoke:     ## RandService burst bench rows only (service/* in BENCH_throughput.json)
 	$(PY) -m benchmarks.throughput service
+
+fleet:             ## 2-shard wire fleet: kill-mid-burst failover, digest vs no-fault, union replay
+	rm -rf /tmp/repro-fleet
+	$(PY) -m repro.service --fleet 2 --burst 256 --tenants 64 \
+	    --journal-dir /tmp/repro-fleet --fault-plan kill@128 --verify-replay
+
+fleet-smoke:       ## fleet bench rows (mixed/hammer/unique/kill; fleet/* in BENCH_throughput.json)
+	$(PY) -m benchmarks.throughput fleet
 
 roofline:          ## roofline smoke + regression gate (merges roofline/* rows, fails if fused/donated regress)
 	$(PY) -m benchmarks.roofline --check

@@ -378,11 +378,78 @@ def service_smoke(out=print, records=None, *, burst: int = 192,
             fill_ratio=stats["fill_ratio"])
 
 
+def fleet_smoke(out=print, records=None, *, burst: int = 96,
+                tenants: int = 32, shards: int = 2) -> None:
+    """Wire-level fleet rows: the adversarial traffic suite over
+    subprocess shards + socket transport.
+
+    Variants: ``mixed`` (baseline spread), ``hammer`` (every request
+    from ONE tenant — no routing spread, one shard absorbs the burst),
+    ``unique`` (every request a distinct shape — zero coalescing), and
+    ``kill`` (mixed traffic with a scripted kill at the burst midpoint:
+    the row's ``recovery_ms`` is the failover cost, and the response
+    digest is asserted equal to the no-fault run — the failover
+    correctness check as a benchmark side effect).
+    """
+    import tempfile
+    import time as _time
+
+    from repro.runtime.fault import FaultPlan
+    from repro.service.audit import response_digest
+    from repro.service.burst import make_requests
+    from repro.service.fleet import Fleet, FleetConfig, run_fleet_burst
+
+    def one(variant: str, pattern: str, plan: FaultPlan):
+        with tempfile.TemporaryDirectory() as jdir:
+            cfg = FleetConfig(num_shards=shards, seed=31,
+                              journal_dir=jdir)
+            reqs = make_requests(burst=burst, tenants=tenants, seed=2,
+                                 pattern=pattern)
+            with Fleet(cfg, plan) as fleet:
+                client = fleet.client()
+                t0 = _time.perf_counter()
+                got = run_fleet_burst(client, reqs)
+                wall = _time.perf_counter() - t0
+                stats = client.stats()
+                client.close()
+        assert len(got) == burst
+        digest = response_digest(got)
+        rps = burst / wall
+        rec_ms = stats["recovery_ms"]
+        out(row(f"fleet/{variant}/burst={burst}", wall / burst * 1e6,
+                f"{rps:.0f} req/s p50={stats['latency_p50_ms']:.1f}ms "
+                f"p99={stats['latency_p99_ms']:.1f}ms "
+                f"retries={stats['retries']} "
+                f"failovers={stats['failovers']}"
+                + (f" recovery={rec_ms:.0f}ms" if rec_ms is not None
+                   else "")))
+        _record(records, name=f"fleet/{variant}/burst={burst}",
+                backend="fleet", sampler="mixed", dtype="mixed",
+                variant=variant, num_streams=tenants, num_steps=burst,
+                us_per_call=wall / burst * 1e6,
+                requests_per_s=rps,
+                latency_p50_ms=stats["latency_p50_ms"],
+                latency_p99_ms=stats["latency_p99_ms"],
+                retries=stats["retries"], failovers=stats["failovers"],
+                recovery_ms=rec_ms)
+        return digest
+
+    baseline = one("mixed", "mixed", FaultPlan())
+    one("hammer", "hammer", FaultPlan())
+    one("unique", "unique", FaultPlan())
+    killed = one("kill", "mixed", FaultPlan.parse(f"kill@{burst // 2}"))
+    assert killed == baseline, (
+        "kill-mid-burst digest diverged from the no-fault run — "
+        "failover is NOT bit-identical")
+    out("# fleet: kill-mid-burst digest == no-fault digest (bit-identical)")
+
+
 SMOKES = {
     "smoke": smoke,
     "sampler": sampler_smoke,
     "pipelined": pipelined_smoke,
     "service": service_smoke,
+    "fleet": fleet_smoke,
 }
 
 

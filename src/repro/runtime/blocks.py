@@ -173,6 +173,11 @@ class _Ledger:
         return None
 
     def reserve(self, lo: int, hi: int) -> None:
+        if lo < self.floor:
+            raise LeaseError(
+                f"window [{lo}, {hi}) starts below the fenced floor "
+                f"{self.floor} (counters below the floor may already "
+                f"have been served by a previous owner)")
         clash = self._overlaps(lo, hi)
         if clash is not None:
             raise LeaseError(
@@ -401,6 +406,21 @@ class BlockService:
                              for name, s in chans.items()}
             for name in self._channels:
                 self._ledgers.setdefault(name, _Ledger())
+
+    def fence(self, name: str, floor: int) -> int:
+        """Raise channel ``name``'s lease floor to at least ``floor``.
+
+        Every future lease — including an explicit ``lease(at=...)``
+        into a gap between old committed windows — starts at or past
+        the floor.  This is the failover primitive: a peer adopting a
+        dead shard's journal fences each channel at its journaled
+        high-water mark, so no counter the dead shard *might* have
+        handed out can ever be re-leased.  Returns the new floor.
+        """
+        with self._lock:
+            led = self._ledgers.setdefault(name, _Ledger())
+            led.floor = max(led.floor, int(floor))
+            return led.floor
 
     # -- generation --------------------------------------------------------
 

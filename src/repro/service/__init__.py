@@ -3,20 +3,56 @@
 The serving layer over ``core.engine`` + ``runtime.blocks``: a
 deterministic tenant registry (``tenants``), a request-coalescing
 frontend (``frontend``), a bounded-queue dispatch server with standing
-producer pools (``server``), and an append-only replayable request
-journal (``audit``).  See ``docs/service.md``.
+producer pools (``server``), an append-only replayable request journal
+(``audit``), and — over the wire — a length-prefixed socket transport
+(``transport``) plus a sharded fleet with journal-backed failover
+(``fleet``).  See ``docs/service.md``.
+
+``fleet``/``transport`` symbols are imported lazily (PEP 562): the
+in-process service must stay importable without touching the socket
+layer.
 """
-from repro.service.audit import Journal, replay, verify_ledger_disjoint
+from repro.service.audit import (Journal, JournalLockedError, replay,
+                                 replay_entry, verify_ledger_disjoint)
 from repro.service.frontend import (Coalescer, RandRequest, class_channel,
                                     request_rows)
-from repro.service.server import RandServer, ServerConfig, ServiceClosed
+from repro.service.server import (RandServer, ServerConfig, ServiceClosed,
+                                  drain_signal_event)
 from repro.service.tenants import (QuotaExceeded, Tenant,
                                    TenantCollisionError, TenantRegistry,
                                    tenant_region)
 
+_WIRE = {
+    "Fleet": "repro.service.fleet",
+    "FleetClient": "repro.service.fleet",
+    "FleetConfig": "repro.service.fleet",
+    "FleetError": "repro.service.fleet",
+    "HashRing": "repro.service.fleet",
+    "run_fleet_burst": "repro.service.fleet",
+    "ShardHost": "repro.service.transport",
+    "TransportError": "repro.service.transport",
+    "FrameTooLarge": "repro.service.transport",
+    "TornFrame": "repro.service.transport",
+    "WireError": "repro.service.transport",
+}
+
+
+def __getattr__(name):
+    mod = _WIRE.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)
+
+
 __all__ = [
-    "Coalescer", "Journal", "QuotaExceeded", "RandRequest", "RandServer",
-    "ServerConfig", "ServiceClosed", "Tenant", "TenantCollisionError",
-    "TenantRegistry", "class_channel", "replay", "request_rows",
-    "tenant_region", "verify_ledger_disjoint",
+    "Coalescer", "Fleet", "FleetClient", "FleetConfig", "FleetError",
+    "FrameTooLarge", "HashRing", "Journal", "JournalLockedError",
+    "QuotaExceeded", "RandRequest", "RandServer", "ServerConfig",
+    "ServiceClosed", "ShardHost", "Tenant", "TenantCollisionError",
+    "TenantRegistry", "TornFrame", "TransportError", "WireError",
+    "class_channel", "drain_signal_event", "replay", "replay_entry",
+    "request_rows", "run_fleet_burst", "tenant_region",
+    "verify_ledger_disjoint",
 ]

@@ -10,21 +10,99 @@ order-independent response digest, then drains gracefully.
 
 ``--verify-replay`` re-reads the journal in a FRESH server context and
 asserts byte-identical regeneration; ``--linger`` keeps the server up
-after the burst until SIGINT, which triggers the graceful drain (the
-Makefile's ``make service`` and the SIGINT test drive this path).
+after the burst until SIGINT/SIGTERM, either of which triggers the
+graceful drain (the Makefile's ``make service`` and the signal tests
+drive this path).
+
+``--fleet N`` runs the same burst against an N-shard subprocess fleet
+(``repro.service.fleet``) over the socket transport instead of an
+in-process server; ``--fault-plan`` scripts the adversary:
+
+  PYTHONPATH=src python -m repro.service --fleet 2 --burst 1024 \\
+      --tenants 256 --journal-dir /tmp/fleet --fault-plan kill@512
+
+Because every shard serves its request subsequence in order against
+the same global plan, the printed digest is identical with and without
+the fault plan — that equality is the failover correctness check CI
+runs three times in a row.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import signal
 import sys
-import threading
 import time
 
 from repro.service import audit
 from repro.service.burst import make_requests, run_burst
-from repro.service.server import RandServer, ServerConfig
+from repro.service.server import (RandServer, ServerConfig,
+                                  drain_signal_event)
+
+
+def _run_fleet(args) -> int:
+    """The ``--fleet N`` path: subprocess shards, socket transport,
+    scripted faults, digest + optional union replay over the shard
+    journals."""
+    from repro.runtime.fault import FaultPlan
+    from repro.service.fleet import Fleet, FleetConfig, run_fleet_burst
+
+    plan = FaultPlan.parse(args.fault_plan)
+    fcfg = FleetConfig(num_shards=args.fleet, seed=args.seed,
+                       journal_dir=args.journal_dir,
+                       max_batch=1, queue_depth=max(4096, args.burst))
+    reqs = make_requests(burst=args.burst, tenants=args.tenants,
+                         seed=args.seed, pattern=args.pattern)
+    with Fleet(fcfg, plan) as fleet:
+        client = fleet.client()
+        t0 = time.perf_counter()
+        responses = run_fleet_burst(client, reqs)
+        wall_s = time.perf_counter() - t0
+        cstats = client.stats()
+        client.close()
+        journals = fleet.journals()
+        fleet.stop()
+
+    digest = audit.response_digest(responses)
+    print(f"fleet[{args.fleet}] served {len(responses)}/{args.burst} "
+          f"requests from {args.tenants} tenants in {wall_s:.3f}s "
+          f"({len(responses) / wall_s:.0f} req/s wall)"
+          + (f"  [faults: {args.fault_plan}]" if plan else ""))
+    print(f"latency p50={cstats['latency_p50_ms']:.2f}ms "
+          f"p99={cstats['latency_p99_ms']:.2f}ms  "
+          f"retries={cstats['retries']} failovers={cstats['failovers']}"
+          + (f" recovery={cstats['recovery_ms']:.0f}ms"
+             if cstats["recovery_ms"] is not None else ""))
+    print(f"digest {digest}")
+
+    rc = 0
+    if args.verify_replay:
+        # union replay: each shard journal regenerates its slice of the
+        # burst in a fresh context; together they must reproduce every
+        # response byte-for-byte
+        replayed = {}
+        for i, path in sorted(journals.items()):
+            part = audit.replay(path, seed=args.seed)
+            audit.verify_ledger_disjoint(audit.Journal(path,
+                                                       readonly=True))
+            replayed.update(part)
+        same = (set(replayed) == set(responses)
+                and audit.response_digest(replayed) == digest)
+        print(f"replay: {'OK — bit-identical' if same else 'MISMATCH'} "
+              f"({len(replayed)} journaled requests across "
+              f"{len(journals)} shards)")
+        if not same:
+            rc = 1
+
+    if args.digest_out:
+        with open(args.digest_out, "w") as f:
+            f.write(digest + "\n")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"burst": args.burst, "tenants": args.tenants,
+                       "seed": args.seed, "fleet": args.fleet,
+                       "fault_plan": args.fault_plan, "wall_s": wall_s,
+                       "digest": digest, "stats": cstats}, f, indent=2)
+    return rc
 
 
 def main(argv=None) -> int:
@@ -32,6 +110,19 @@ def main(argv=None) -> int:
     ap.add_argument("--burst", type=int, default=512)
     ap.add_argument("--tenants", type=int, default=1024)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pattern", default="mixed",
+                    choices=("mixed", "hammer", "unique"),
+                    help="traffic shape: mixed classes, single-tenant "
+                         "hammer, or all-unique shapes")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve over N subprocess shards via the socket "
+                         "transport instead of in-process")
+    ap.add_argument("--fault-plan", default="",
+                    help="scripted faults for fleet mode, e.g. "
+                         "'kill@512' or 'hang@40#1~30' (see "
+                         "repro.runtime.fault.FaultPlan.parse)")
+    ap.add_argument("--journal-dir", default="/tmp/repro-fleet",
+                    help="fleet mode: per-shard journal/log directory")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--max-delay", type=float, default=0.25,
                     help="microbatch deadline seconds (generous default "
@@ -53,6 +144,9 @@ def main(argv=None) -> int:
                          "(SIGINT drains gracefully and exits 0)")
     args = ap.parse_args(argv)
 
+    if args.fleet:
+        return _run_fleet(args)
+
     deterministic = args.submit_threads == 0
     cfg = ServerConfig(
         max_batch=args.max_batch, max_delay_s=args.max_delay,
@@ -66,15 +160,12 @@ def main(argv=None) -> int:
     server = RandServer(args.seed, config=cfg, journal=journal,
                         start=not deterministic)
 
-    interrupted = threading.Event()
-
-    def on_sigint(signum, frame):
-        interrupted.set()
-
-    signal.signal(signal.SIGINT, on_sigint)
+    # SIGINT (interactive ^C) and SIGTERM (supervisors) both trigger
+    # the same graceful drain
+    interrupted = drain_signal_event()
 
     reqs = make_requests(burst=args.burst, tenants=args.tenants,
-                         seed=args.seed)
+                         seed=args.seed, pattern=args.pattern)
     t0 = time.perf_counter()
     if deterministic:
         futs = [server.submit(r) for r in reqs]
@@ -122,7 +213,7 @@ def main(argv=None) -> int:
                        "digest": digest, "stats": stats}, f, indent=2)
 
     if args.linger > 0 and rc == 0:
-        print("ready (SIGINT to drain)", flush=True)
+        print("ready (SIGINT/SIGTERM to drain)", flush=True)
         deadline = time.monotonic() + args.linger
         while not interrupted.is_set() and time.monotonic() < deadline:
             interrupted.wait(0.1)

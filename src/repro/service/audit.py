@@ -35,6 +35,22 @@ from repro.core import engine, u64
 from repro.runtime import blocks
 from repro.service.frontend import Assignment, slice_response
 
+try:                               # POSIX only; fencing degrades to a
+    import fcntl                   # no-op where flock does not exist
+except ImportError:                # pragma: no cover - non-POSIX
+    fcntl = None
+
+
+class JournalLockedError(RuntimeError):
+    """Another live process holds this journal's exclusive lock.
+
+    Exactly one process may ever append to a journal: two writers would
+    silently interleave windows and requests, corrupting the replay
+    record.  The lock doubles as the fleet's *fencing* primitive — a
+    failover peer adopts a dead shard by taking its journal lock, which
+    the OS only releases when the owning process is actually gone.
+    """
+
 
 class Journal:
     """Append-only JSONL journal (or in-memory when ``path`` is None).
@@ -44,6 +60,12 @@ class Journal:
     ``restore_into(service)`` and, when responses must be re-served,
     ``replay(journal, seed=...)``.
 
+    Opening a path takes an exclusive ``flock`` held for the journal's
+    lifetime (:class:`JournalLockedError` if another process has it);
+    ``readonly=True`` skips the lock and the append handle — an
+    auditor's view that can inspect a journal another process is
+    actively writing.
+
     Example:
         >>> from repro.service.audit import Journal
         >>> j = Journal()                      # in-memory
@@ -52,37 +74,63 @@ class Journal:
         ['window']
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None, *,
+                 readonly: bool = False):
         self.path = path
+        self.readonly = readonly
         self._entries: List[Dict[str, Any]] = []
         self._fh = None
-        if path is not None:
+        self._rid_entries: Dict[str, Dict[str, Any]] = {}
+        self._rid_cursor = 0
+        if path is None:
+            return
+        if readonly:
             if os.path.exists(path):
-                with open(path, "rb") as f:
-                    raw_lines = f.read().splitlines(keepends=True)
-                good_bytes = 0
-                for i, bline in enumerate(raw_lines):
-                    line = bline.strip()
-                    if not line:
-                        good_bytes += len(bline)
-                        continue
-                    try:
-                        self._entries.append(json.loads(line))
-                    except (json.JSONDecodeError, UnicodeDecodeError):
-                        if i == len(raw_lines) - 1:
-                            break   # torn final line: crashed mid-write
-                        raise
-                    good_bytes += len(bline)
-                if good_bytes < sum(len(b) for b in raw_lines):
-                    with open(path, "r+b") as f:
-                        f.truncate(good_bytes)  # drop the torn tail
-                elif raw_lines and not raw_lines[-1].endswith(b"\n"):
-                    # crash AFTER the final brace but before the newline:
-                    # the record is complete — terminate its line so the
-                    # next append cannot concatenate onto it
-                    with open(path, "ab") as f:
-                        f.write(b"\n")
-            self._fh = open(path, "a", encoding="utf-8")
+                self._load(path, repair=False)
+            return
+        # lock BEFORE the torn-tail repair: a second writer must fail
+        # here, not interleave its own repair/appends with ours
+        self._fh = open(path, "a", encoding="utf-8")
+        if fcntl is not None:
+            try:
+                fcntl.flock(self._fh.fileno(),
+                            fcntl.LOCK_EX | fcntl.LOCK_NB)
+            except OSError:
+                fh, self._fh = self._fh, None
+                fh.close()
+                raise JournalLockedError(
+                    f"journal {path!r} is locked by another live "
+                    f"process; a journal has exactly one writer "
+                    f"(fence the owner before adopting its journal)")
+        self._load(path, repair=True)
+
+    def _load(self, path: str, *, repair: bool) -> None:
+        with open(path, "rb") as f:
+            raw_lines = f.read().splitlines(keepends=True)
+        good_bytes = 0
+        for i, bline in enumerate(raw_lines):
+            line = bline.strip()
+            if not line:
+                good_bytes += len(bline)
+                continue
+            try:
+                self._entries.append(json.loads(line))
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                if i == len(raw_lines) - 1:
+                    break   # torn final line: crashed mid-write
+                raise
+            good_bytes += len(bline)
+        if not repair:
+            return
+        if good_bytes < sum(len(b) for b in raw_lines):
+            with open(path, "r+b") as f:
+                f.truncate(good_bytes)  # drop the torn tail
+        elif raw_lines and not raw_lines[-1].endswith(b"\n"):
+            # crash AFTER the final brace but before the newline:
+            # the record is complete — terminate its line so the
+            # next append cannot concatenate onto it
+            with open(path, "ab") as f:
+                f.write(b"\n")
 
     @property
     def entries(self) -> List[Dict[str, Any]]:
@@ -115,12 +163,27 @@ class Journal:
             os.fsync(self._fh.fileno())
 
     def close(self) -> None:
+        """Close the append handle — which also releases the exclusive
+        journal lock, letting the next writer (restart or failover
+        peer) take ownership."""
         if self._fh is not None:
-            self._fh.close()
+            self._fh.close()        # flock released with the descriptor
             self._fh = None
 
     def requests(self) -> List[Dict[str, Any]]:
         return [e for e in self._entries if e["kind"] == "request"]
+
+    def find_request(self, rid: str) -> Optional[Dict[str, Any]]:
+        """The journaled request record for ``rid`` (``None`` if never
+        journaled).  Incremental index over the live entry list, so the
+        fleet's idempotent-retry path (a resubmitted rid is answered by
+        replay, never served twice) stays O(1) amortized."""
+        while self._rid_cursor < len(self._entries):
+            e = self._entries[self._rid_cursor]
+            self._rid_cursor += 1
+            if e["kind"] == "request":
+                self._rid_entries[e["rid"]] = e
+        return self._rid_entries.get(rid)
 
     def windows(self) -> List[Dict[str, Any]]:
         return [e for e in self._entries if e["kind"] == "window"]
@@ -142,10 +205,24 @@ class Journal:
             channels[name] = {"committed": merged, "floor": 0}
         return {"channels": channels}
 
-    def restore_into(self, service: blocks.BlockService) -> None:
+    def restore_into(self, service: blocks.BlockService, *,
+                     fence: bool = False) -> None:
         """Fence off every journaled window in a (fresh) BlockService so
-        a restarted server leases strictly new counters."""
-        service.restore_ledger(self.ledger_state())
+        a restarted server leases strictly new counters.
+
+        ``fence=True`` additionally raises each channel's lease *floor*
+        to its journaled high-water mark (``BlockService.fence``): even
+        an explicit ``lease(at=...)`` into a gap below it is refused —
+        the guarantee a failover peer needs before resuming a dead
+        shard's tenant regions.
+        """
+        state = self.ledger_state()
+        service.restore_ledger(state)
+        if fence:
+            for name, led in state.get("channels", {}).items():
+                wins = led.get("committed", [])
+                if wins:
+                    service.fence(name, max(int(hi) for _, hi in wins))
 
 
 def _entries_of(journal: Union[Journal, str, Iterable[Dict[str, Any]]]
@@ -153,7 +230,9 @@ def _entries_of(journal: Union[Journal, str, Iterable[Dict[str, Any]]]
     if isinstance(journal, Journal):
         return journal.entries
     if isinstance(journal, str):
-        return Journal(journal).entries
+        # an auditor's read, never a write: no lock, no tail repair —
+        # replay over a path works even while the owner is still live
+        return Journal(journal, readonly=True).entries
     return list(journal)
 
 
@@ -183,22 +262,33 @@ def replay(journal: Union[Journal, str, Iterable[Dict[str, Any]]], *,
     for e in _entries_of(journal):
         if e["kind"] != "request":
             continue
-        purpose = blocks.channel_purpose(e["channel"])
-        x0, h_fam = engine.family_from_seed(seed, purpose)
-        tags = e["tags"]
-        tag_hi = np.asarray([t >> 32 for t in tags], np.uint32)
-        tag_lo = np.asarray([t & 0xFFFFFFFF for t in tags], np.uint32)
-        c_hi, c_lo = (u64.to_u32(v) for v in u64.const64(e["lo"]))
-        fn = _replay_fn(int(e["rows"]), len(tags), e["sampler"], e["dtype"],
-                        e.get("deco", "splitmix64"), backend)
-        block = np.asarray(fn(x0[0], x0[1], h_fam[0], h_fam[1],
-                              tag_hi, tag_lo, c_hi, c_lo))
-        shape = tuple(e["shape"])
-        n = 1
-        for d in shape:
-            n *= d
-        out[e["rid"]] = slice_response(block, 0, len(tags), n, shape)
+        out[e["rid"]] = replay_entry(e, seed=seed, backend=backend)
     return out
+
+
+def replay_entry(e: Dict[str, Any], *, seed: int,
+                 backend: Optional[str] = "xla") -> np.ndarray:
+    """Regenerate ONE journaled request record, bit-identically.
+
+    The fleet transport answers a resubmitted rid through this (the
+    idempotent-retry path): a request whose assignment is already
+    durable is replayed from the journal, never served a second window.
+    """
+    purpose = blocks.channel_purpose(e["channel"])
+    x0, h_fam = engine.family_from_seed(seed, purpose)
+    tags = e["tags"]
+    tag_hi = np.asarray([t >> 32 for t in tags], np.uint32)
+    tag_lo = np.asarray([t & 0xFFFFFFFF for t in tags], np.uint32)
+    c_hi, c_lo = (u64.to_u32(v) for v in u64.const64(e["lo"]))
+    fn = _replay_fn(int(e["rows"]), len(tags), e["sampler"], e["dtype"],
+                    e.get("deco", "splitmix64"), backend)
+    block = np.asarray(fn(x0[0], x0[1], h_fam[0], h_fam[1],
+                          tag_hi, tag_lo, c_hi, c_lo))
+    shape = tuple(e["shape"])
+    n = 1
+    for d in shape:
+        n *= d
+    return slice_response(block, 0, len(tags), n, shape)
 
 
 @functools.lru_cache(maxsize=512)

@@ -29,24 +29,47 @@ BURST_CLASSES: Tuple[Tuple[str, str], ...] = (
 )
 
 
+#: adversarial traffic shapes (see ``make_requests(pattern=...)``)
+BURST_PATTERNS: Tuple[str, ...] = ("mixed", "hammer", "unique")
+
+
 def make_requests(*, burst: int, tenants: int, seed: int,
                   max_side: int = 64,
-                  rid_prefix: str = "burst") -> List[RandRequest]:
+                  rid_prefix: str = "burst",
+                  pattern: str = "mixed") -> List[RandRequest]:
     """``burst`` rid-stamped requests over ``tenants`` distinct tenant
     ids with mixed shapes (1-D and 2-D), samplers and dtypes.
 
     ``rid_prefix`` keeps rids unique across bursts sharing one journal
-    (journaled rids may never repeat)."""
+    (journaled rids may never repeat).
+
+    ``pattern`` selects the traffic shape — the adversarial suite the
+    fleet benchmark sweeps:
+      * ``"mixed"`` — the default spread over tenants/classes/shapes,
+      * ``"hammer"`` — every request from ONE tenant (no routing
+        spread: one shard absorbs the whole burst; worst case for the
+        hash ring and for a kill on that shard),
+      * ``"unique"`` — every request a distinct (shape, class): zero
+        coalescing opportunity, every request its own quantised window.
+    """
+    if pattern not in BURST_PATTERNS:
+        raise ValueError(f"unknown pattern {pattern!r}; "
+                         f"have {BURST_PATTERNS}")
     rng = random.Random(seed ^ 0x5EED5)
     reqs: List[RandRequest] = []
     for i in range(burst):
         sampler, dtype = BURST_CLASSES[i % len(BURST_CLASSES)]
-        if rng.random() < 0.5:
-            shape: Tuple[int, ...] = (rng.randint(1, max_side * max_side),)
+        if pattern == "unique":
+            # distinct sizes -> distinct quantised rows per request
+            shape: Tuple[int, ...] = (max(1, i) * 7 + rng.randint(0, 6),)
+        elif rng.random() < 0.5:
+            shape = (rng.randint(1, max_side * max_side),)
         else:
             shape = (rng.randint(1, max_side), rng.randint(1, max_side))
+        tenant = ("tenant/00000" if pattern == "hammer"
+                  else f"tenant/{i % tenants:05d}")
         reqs.append(RandRequest(
-            tenant_id=f"tenant/{i % tenants:05d}", shape=shape,
+            tenant_id=tenant, shape=shape,
             sampler=sampler, out_dtype=dtype, rid=f"{rid_prefix}/{i:06d}"))
     return reqs
 

@@ -1,0 +1,547 @@
+"""RandService fleet: sharded serving with journal-backed failover.
+
+The paper's decorrelated counter addressing makes every response a pure
+function of ``(seed, tenant tags, counter window)`` — so a serving
+*fleet* needs no shared mutable state at all.  Each shard process runs
+a full ``RandServer`` over the SAME global plan; the client-side hash
+ring decides which tenants it serves; the only durable state is the
+shard's append-only journal.  Failover is therefore *stateless*: a
+surviving peer takes the dead shard's journal lock (the OS releases a
+flock only when the owner is truly gone — fencing for free), restores
+the journaled windows into a fresh ledger, raises the lease floor to
+the journaled high-water mark, and resumes the dead shard's tenant
+regions.  Because each shard serves its request subsequence in client
+order with ``max_batch=1``, the assignment of every request — and hence
+every byte — is identical to a run where the shard never died, which is
+exactly what the kill-mid-burst CI check asserts by digest equality.
+
+Pieces:
+
+  * :class:`HashRing` — consistent tenant -> logical-shard routing
+    (blake2s vnodes, pure function of the shard count),
+  * :class:`Fleet` — controller that spawns N ``ShardHost``
+    subprocesses, hands out addresses, and can *fence* (SIGKILL + wait)
+    a shard that is alive-but-hung so its journal lock drops,
+  * :class:`FleetClient` — router with per-request deadlines, bounded
+    exponential backoff, and fence-gated hedged resubmission: when the
+    owner of a shard stops answering, the client asks the failover peer
+    to adopt the shard's journal; the peer's flock attempt either
+    succeeds (owner dead -> hedge serves there) or reports ``locked``
+    (owner alive -> back off, optionally fence, retry),
+  * :func:`run_fleet_burst` — per-shard in-order burst driver (the
+    deterministic traffic shape the digest checks rely on).
+
+Subprocess entry: ``python -m repro.service.fleet --serve --shard i``
+(spawned by :class:`Fleet`; drains gracefully on SIGTERM/SIGINT).
+"""
+from __future__ import annotations
+
+import argparse
+import bisect
+import dataclasses
+import hashlib
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.fault import FaultInjector, FaultPlan
+from repro.service import transport
+from repro.service.frontend import RandRequest
+from repro.service.server import ServerConfig, drain_signal_event
+
+
+# ---------------------------------------------------------------------------
+# Consistent-hash routing
+# ---------------------------------------------------------------------------
+
+def _h64(text: str) -> int:
+    return int.from_bytes(
+        hashlib.blake2s(text.encode("utf-8"), digest_size=8).digest(),
+        "little")
+
+
+class HashRing:
+    """Consistent tenant -> shard map: ``replicas`` blake2s vnodes per
+    shard on a u64 ring.  Pure function of ``(num_shards, replicas)`` —
+    every client and every test derives the identical routing table
+    with zero coordination.
+
+    Example:
+        >>> from repro.service.fleet import HashRing
+        >>> ring = HashRing(2)
+        >>> ring.owner("tenant/00042") == ring.owner("tenant/00042")
+        True
+        >>> sorted({ring.owner(f"t{i}") for i in range(64)})
+        [0, 1]
+    """
+
+    def __init__(self, num_shards: int, *, replicas: int = 64):
+        if num_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {num_shards}")
+        self.num_shards = num_shards
+        self.replicas = replicas
+        pts = []
+        for s in range(num_shards):
+            for r in range(replicas):
+                pts.append((_h64(f"shard:{s}:vnode:{r}"), s))
+        pts.sort()
+        self._points = [p for p, _ in pts]
+        self._owners = [s for _, s in pts]
+
+    def owner(self, tenant_id: str) -> int:
+        """Logical shard owning ``tenant_id``'s region."""
+        h = _h64(f"tenant:{tenant_id}")
+        i = bisect.bisect_right(self._points, h) % len(self._points)
+        return self._owners[i]
+
+    def peers(self, shard: int) -> List[int]:
+        """Failover preference order for ``shard``: the other shards,
+        nearest successor first (deterministic — every client picks the
+        same adoption target)."""
+        return [(shard + k) % self.num_shards
+                for k in range(1, self.num_shards)]
+
+
+# ---------------------------------------------------------------------------
+# Fleet controller (parent process)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Topology + client policy of one fleet run.
+
+    ``max_batch=1`` is deliberate: each shard serves its request
+    subsequence one at a time in arrival order, making every assignment
+    a pure function of (per-shard request order, ledger high-water) —
+    the property the kill-mid-burst digest-equality check depends on.
+    """
+    num_shards: int = 2
+    seed: int = 0
+    journal_dir: str = "."
+    host: str = "127.0.0.1"
+    max_batch: int = 1
+    queue_depth: int = 4096
+    deadline_s: float = 120.0        # generous: first contacts pay jit
+    connect_timeout_s: float = 10.0
+    max_retries: int = 6
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    replicas: int = 64
+    spawn_timeout_s: float = 120.0
+
+
+class FleetError(RuntimeError):
+    """A request could not be served within the retry/deadline budget."""
+
+
+class Fleet:
+    """Spawn and supervise ``num_shards`` ShardHost subprocesses.
+
+    Each child binds an ephemeral port and writes it to
+    ``<journal_dir>/shard<i>.port``; stdout/stderr stream to
+    ``shard<i>.log``.  ``fence(i)`` is the STONITH step: SIGKILL + wait,
+    guaranteeing the child's journal flock is released before a peer
+    adopts it.
+    """
+
+    def __init__(self, config: FleetConfig,
+                 fault_plan: Optional[FaultPlan] = None):
+        self.config = config
+        self.fault_plan = fault_plan or FaultPlan()
+        os.makedirs(config.journal_dir, exist_ok=True)
+        self._procs: List[subprocess.Popen] = []
+        self._addrs: Dict[int, Tuple[str, int]] = {}
+        src_root = os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_root + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        for i in range(config.num_shards):
+            cmd = [sys.executable, "-m", "repro.service.fleet", "--serve",
+                   "--shard", str(i), "--seed", str(config.seed),
+                   "--host", config.host,
+                   "--journal", self.journal_path(i),
+                   "--port-file", self._port_file(i),
+                   "--max-batch", str(config.max_batch),
+                   "--queue-depth", str(config.queue_depth)]
+            if self.fault_plan:
+                cmd += ["--fault-plan", self.fault_plan.to_json()]
+            log = open(os.path.join(config.journal_dir,
+                                    f"shard{i}.log"), "ab")
+            try:
+                self._procs.append(subprocess.Popen(
+                    cmd, env=env, stdout=log, stderr=subprocess.STDOUT))
+            finally:
+                log.close()
+        self._await_ports()
+
+    def _port_file(self, i: int) -> str:
+        return os.path.join(self.config.journal_dir, f"shard{i}.port")
+
+    def journal_path(self, i: int) -> str:
+        return os.path.join(self.config.journal_dir, f"shard{i}.jsonl")
+
+    def _await_ports(self) -> None:
+        deadline = time.monotonic() + self.config.spawn_timeout_s
+        for i, proc in enumerate(self._procs):
+            pf = self._port_file(i)
+            while True:
+                if os.path.exists(pf):
+                    try:
+                        port = int(open(pf).read().strip())
+                        break
+                    except ValueError:
+                        pass        # partially written; poll again
+                if proc.poll() is not None:
+                    raise FleetError(
+                        f"shard {i} exited rc={proc.returncode} before "
+                        f"listening (see shard{i}.log)")
+                if time.monotonic() > deadline:
+                    raise FleetError(f"shard {i} never published a port")
+                time.sleep(0.02)
+            self._addrs[i] = (self.config.host, port)
+
+    def address(self, i: int) -> Tuple[str, int]:
+        return self._addrs[i]
+
+    def addresses(self) -> Dict[int, Tuple[str, int]]:
+        return dict(self._addrs)
+
+    def journals(self) -> Dict[int, str]:
+        return {i: self.journal_path(i)
+                for i in range(self.config.num_shards)}
+
+    def alive(self, i: int) -> bool:
+        return self._procs[i].poll() is None
+
+    def fence(self, i: int) -> None:
+        """Guarantee shard process ``i`` is dead (SIGKILL + reap) so its
+        journal lock is released — the STONITH step before adoption."""
+        proc = self._procs[i]
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=30)
+
+    def client(self, **overrides) -> "FleetClient":
+        return FleetClient(self.addresses(), self.journals(),
+                           config=self.config, fencer=self.fence,
+                           **overrides)
+
+    def stop(self, timeout: float = 60.0) -> None:
+        """Graceful fleet shutdown: SIGTERM (drain) then SIGKILL."""
+        for proc in self._procs:
+            if proc.poll() is None:
+                proc.terminate()
+        deadline = time.monotonic() + timeout
+        for proc in self._procs:
+            try:
+                proc.wait(timeout=max(0.1, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait(timeout=30)
+
+    def __enter__(self) -> "Fleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+# ---------------------------------------------------------------------------
+# Client-side router
+# ---------------------------------------------------------------------------
+
+class _ShardConn:
+    """One persistent connection to whichever process owns a logical
+    shard.  Single-owner (the per-shard burst thread); reconnects on
+    demand."""
+
+    def __init__(self, host: str, port: int, *, connect_timeout: float):
+        self.addr = (host, port)
+        self.connect_timeout = connect_timeout
+        self._sock: Optional[socket.socket] = None
+
+    def call(self, msg: Dict[str, Any], *,
+             deadline_s: float) -> Dict[str, Any]:
+        if self._sock is None:
+            self._sock = socket.create_connection(
+                self.addr, timeout=self.connect_timeout)
+        self._sock.settimeout(deadline_s)
+        try:
+            transport.send_frame(self._sock, msg)
+            reply = transport.recv_frame(self._sock)
+        except (OSError, transport.TransportError):
+            self.close()
+            raise
+        if reply is None:
+            self.close()
+            raise transport.TornFrame(f"EOF from {self.addr}")
+        return reply
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+
+class FleetClient:
+    """Route requests to shard owners; retry, hedge, and fail over.
+
+    The failure path for a request whose owner stopped answering:
+
+    1. bounded exponential backoff retries against the current owner
+       (covers transient slowness and scripted ``slow`` faults —
+       idempotent because a journaled rid is answered by replay),
+    2. in parallel with each retry, a *fence-gated hedge*: ask the
+       ring's failover peer to ``adopt`` the shard's journal.  The
+       peer's exclusive flock attempt is the safety interlock — it
+       succeeds only if the owner is actually dead,
+    3. if adoption keeps reporting ``locked`` (owner alive but hung)
+       and a ``fencer`` is available, fence the owner (SIGKILL + wait)
+       and adopt — never two writers, never a lost response.
+    """
+
+    def __init__(self, addresses: Dict[int, Tuple[str, int]],
+                 journals: Dict[int, str], *,
+                 config: Optional[FleetConfig] = None,
+                 fencer: Optional[Callable[[int], None]] = None,
+                 ring: Optional[HashRing] = None,
+                 deadline_s: Optional[float] = None,
+                 fence_after: int = 2):
+        self.config = config or FleetConfig(num_shards=len(addresses))
+        self.addresses = dict(addresses)
+        self.journals = dict(journals)
+        self.fencer = fencer
+        self.fence_after = fence_after
+        self.deadline_s = (self.config.deadline_s
+                           if deadline_s is None else deadline_s)
+        self.ring = ring or HashRing(len(addresses),
+                                     replicas=self.config.replicas)
+        # logical shard -> process index currently hosting it
+        self._owner: Dict[int, int] = {i: i for i in addresses}
+        self._conns: Dict[int, _ShardConn] = {}
+        self._lock = threading.Lock()
+        self.latencies: List[float] = []
+        self.retries = 0
+        self.failovers = 0
+        self.errors = 0
+        self.recovery_s: Optional[float] = None
+
+    # -- connection/ownership ---------------------------------------------
+
+    def _conn(self, logical: int) -> _ShardConn:
+        with self._lock:
+            proc = self._owner[logical]
+            conn = self._conns.get(logical)
+            host, port = self.addresses[proc]
+            if conn is None or conn.addr != (host, port):
+                if conn is not None:
+                    conn.close()
+                conn = _ShardConn(
+                    host, port,
+                    connect_timeout=self.config.connect_timeout_s)
+                self._conns[logical] = conn
+            return conn
+
+    def _try_adopt(self, logical: int) -> bool:
+        """Hedge to the failover peer: adopted -> reroute and return
+        True; ``locked`` (owner still alive) -> False."""
+        dead_proc = self._owner[logical]
+        for peer_logical in self.ring.peers(logical):
+            with self._lock:
+                peer_proc = self._owner[peer_logical]
+            if peer_proc == dead_proc:
+                continue
+            try:
+                reply = transport.rpc(
+                    self.addresses[peer_proc],
+                    {"op": "adopt", "shard": logical,
+                     "journal": self.journals[logical]},
+                    timeout=self.config.connect_timeout_s)
+            except (OSError, transport.TransportError):
+                continue            # peer also unreachable; next one
+            if reply.get("ok"):
+                with self._lock:
+                    self._owner[logical] = peer_proc
+                    conn = self._conns.pop(logical, None)
+                if conn is not None:
+                    conn.close()
+                self.failovers += 1
+                return True
+            if reply.get("kind") != "locked":
+                continue
+        return False
+
+    # -- request path ------------------------------------------------------
+
+    def request(self, req: RandRequest) -> np.ndarray:
+        """Serve one request, riding out owner death: deadline, bounded
+        backoff, fence-gated hedged resubmission."""
+        if req.rid is None:
+            raise ValueError("fleet requests need caller-stamped rids")
+        logical = self.ring.owner(req.tenant_id)
+        msg = transport.request_to_wire(req, logical)
+        t0 = time.perf_counter()
+        failed_at: Optional[float] = None
+        last_exc: Optional[BaseException] = None
+        for attempt in range(self.config.max_retries + 1):
+            try:
+                reply = self._conn(logical).call(
+                    msg, deadline_s=self.deadline_s)
+            except (OSError, transport.TransportError) as e:
+                last_exc = e
+                if failed_at is None:
+                    failed_at = time.perf_counter()
+                self.retries += 1
+                adopted = self._try_adopt(logical)
+                if not adopted:
+                    if (self.fencer is not None
+                            and attempt + 1 >= self.fence_after):
+                        # hung owner: its journal lock is still held —
+                        # fence (SIGKILL + wait) so adoption can proceed
+                        self.fencer(self._owner[logical])
+                        adopted = self._try_adopt(logical)
+                if not adopted:
+                    time.sleep(min(self.config.backoff_cap_s,
+                                   self.config.backoff_base_s
+                                   * (2 ** attempt)))
+                continue
+            if reply.get("ok"):
+                if failed_at is not None and self.recovery_s is None:
+                    self.recovery_s = time.perf_counter() - failed_at
+                self.latencies.append(time.perf_counter() - t0)
+                return transport.decode_array(reply["array"])
+            if reply.get("kind") == "not_owner":
+                # ownership moved (e.g. another thread's failover won):
+                # re-adopt / rediscover, then retry
+                last_exc = transport.WireError("not_owner",
+                                               reply.get("error", ""))
+                self.retries += 1
+                self._try_adopt(logical)
+                continue
+            self.errors += 1
+            raise FleetError(
+                f"shard {logical} refused {req.rid}: "
+                f"{reply.get('kind')}: {reply.get('error')}")
+        self.errors += 1
+        raise FleetError(
+            f"request {req.rid} exhausted {self.config.max_retries} "
+            f"retries against shard {logical}") from last_exc
+
+    def stats(self) -> Dict[str, Any]:
+        lat = np.asarray(self.latencies, np.float64)
+        return {
+            "requests": int(lat.size),
+            "retries": self.retries,
+            "failovers": self.failovers,
+            "errors": self.errors,
+            "recovery_ms": (None if self.recovery_s is None
+                            else self.recovery_s * 1e3),
+            "latency_p50_ms": (float(np.percentile(lat, 50)) * 1e3
+                               if lat.size else 0.0),
+            "latency_p99_ms": (float(np.percentile(lat, 99)) * 1e3
+                               if lat.size else 0.0),
+        }
+
+    def close(self) -> None:
+        with self._lock:
+            conns, self._conns = list(self._conns.values()), {}
+        for conn in conns:
+            conn.close()
+
+
+def run_fleet_burst(client: FleetClient,
+                    requests: List[RandRequest]
+                    ) -> Dict[str, np.ndarray]:
+    """Drive a burst through the fleet: requests partition by owning
+    shard (order preserved) and each partition is served strictly
+    in-order on its own thread — so every shard sees a deterministic
+    subsequence and assignments are reproducible, fault or no fault.
+    """
+    by_shard: Dict[int, List[RandRequest]] = {}
+    for req in requests:
+        by_shard.setdefault(client.ring.owner(req.tenant_id),
+                            []).append(req)
+    responses: Dict[str, np.ndarray] = {}
+    failures: List[BaseException] = []
+    lock = threading.Lock()
+
+    def worker(reqs: List[RandRequest]) -> None:
+        for req in reqs:
+            try:
+                a = client.request(req)
+            except BaseException as e:   # noqa: BLE001 — surfaced below
+                with lock:
+                    failures.append(e)
+                return
+            with lock:
+                responses[req.rid] = a
+
+    threads = [threading.Thread(target=worker, args=(reqs,), daemon=True)
+               for reqs in by_shard.values()]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if failures:
+        raise failures[0]
+    return responses
+
+
+# ---------------------------------------------------------------------------
+# Shard subprocess entry
+# ---------------------------------------------------------------------------
+
+def serve_shard(args) -> int:
+    injector = None
+    if args.fault_plan:
+        injector = FaultInjector(FaultPlan.parse(args.fault_plan))
+    cfg = ServerConfig(max_batch=args.max_batch, max_delay_s=0.0,
+                       queue_depth=args.queue_depth)
+    host = transport.ShardHost(args.seed, host=args.host, port=args.port,
+                               config=cfg, injector=injector)
+    host.add_shard(args.shard, args.journal)
+    stop = drain_signal_event()
+    # port file last: its existence means "accepting and shard is open"
+    tmp = args.port_file + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(str(host.address[1]))
+    os.replace(tmp, args.port_file)
+    stop.wait()
+    host.close()
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="RandService fleet shard process")
+    ap.add_argument("--serve", action="store_true")
+    ap.add_argument("--shard", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--journal", required=True)
+    ap.add_argument("--port-file", required=True)
+    ap.add_argument("--max-batch", type=int, default=1)
+    ap.add_argument("--queue-depth", type=int, default=4096)
+    ap.add_argument("--fault-plan", default="")
+    args = ap.parse_args(argv)
+    if not args.serve:
+        ap.error("--serve is the only mode (spawned by fleet.Fleet)")
+    return serve_shard(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

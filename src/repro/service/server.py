@@ -31,6 +31,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import queue
+import signal as signal_mod
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -146,7 +147,8 @@ class RandServer:
         >>> u = srv.request("docs/tenant", (4,), sampler="uniform")
         >>> (u.shape, str(u.dtype))
         ((4,), 'float32')
-        >>> srv.shutdown()
+        >>> srv.shutdown()     # True: drained (and journal closed)
+        True
     """
 
     def __init__(self, seed: int = 0, *,
@@ -378,8 +380,15 @@ class RandServer:
 
     # -- lifecycle / introspection ----------------------------------------
 
-    def drain(self, timeout: Optional[float] = 60.0) -> None:
-        """Stop admissions, serve everything queued, close the pools."""
+    def drain(self, timeout: Optional[float] = 60.0) -> bool:
+        """Stop admissions, serve everything queued, close the pools.
+
+        ``timeout=None`` waits forever (drain IS bounded by the queued
+        work, so "forever" means "until every admitted request is
+        answered").  Returns True once the loop has fully drained,
+        False if the timeout elapsed first — callers that must not close
+        the journal under the loop's feet (``shutdown``) check this.
+        """
         with self._close_lock:
             first = not self._closed.is_set()
             self._closed.set()     # submits now refuse; queue can only
@@ -387,14 +396,20 @@ class RandServer:
         self.start()               # a never-started server still drains
         if first:
             self._queue.put(_STOP)
-        self._drained.wait(timeout)
-        self._thread.join(timeout)
+        drained = self._drained.wait(timeout)
+        if drained:
+            self._thread.join(timeout)
+        return drained
 
-    def shutdown(self, timeout: Optional[float] = 60.0) -> None:
-        """Graceful drain (alias with journal close)."""
-        self.drain(timeout)
-        if self.journal is not None:
+    def shutdown(self, timeout: Optional[float] = 60.0) -> bool:
+        """Graceful drain; closes the journal (releasing its lock) only
+        once the drain completed — a timed-out drain leaves the journal
+        open so the still-running loop cannot write through a closed
+        fh.  Returns the drain result."""
+        drained = self.drain(timeout)
+        if drained and self.journal is not None:
             self.journal.close()
+        return drained
 
     def __enter__(self) -> "RandServer":
         return self
@@ -443,3 +458,21 @@ class RandServer:
             "fill_ratio": co["fill_ratio"],
             "tenants": len(self.registry),
         }
+
+
+def drain_signal_event(
+        signals: Tuple[int, ...] = (signal_mod.SIGINT, signal_mod.SIGTERM)
+) -> threading.Event:
+    """Install handlers that set (and return) a ``threading.Event`` on
+    the first delivery of any of ``signals`` — the trigger for a
+    graceful drain.  SIGTERM is what process supervisors (and
+    ``fleet.Fleet.stop``) send; SIGINT covers interactive ^C.  Main
+    thread only (CPython restricts ``signal.signal``)."""
+    stop = threading.Event()
+
+    def _handler(signum, frame):
+        stop.set()
+
+    for s in signals:
+        signal_mod.signal(s, _handler)
+    return stop

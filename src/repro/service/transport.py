@@ -1,0 +1,449 @@
+"""Wire transport for the RandService fleet: framed JSON over TCP.
+
+A frame is a 4-byte big-endian length ``N`` followed by ``N`` bytes of
+UTF-8 JSON.  Arrays travel as ``{"dtype", "shape", "data": base64}`` —
+dtype by name (including ``bfloat16`` via ml_dtypes), bytes verbatim, so
+``response_digest`` over wire-decoded responses equals the digest over
+the server's own arrays.  Robustness rules of the framing layer:
+
+  * a frame whose declared length exceeds ``max_frame`` is refused with
+    an error frame and the connection is closed (the stream cannot be
+    resynchronized after an untrusted length),
+  * a peer that disconnects mid-frame raises :class:`TornFrame` on the
+    reader's side; the server closes that connection and keeps
+    accepting — one client's torn write can never wedge the accept
+    loop,
+  * the reply to a request whose rid is already journaled is computed
+    by ``audit.replay_entry`` (flagged ``"replayed": true``), never by
+    serving a second counter window — retries are idempotent by
+    construction.
+
+:class:`ShardHost` is one fleet process: a TCP accept loop over a set
+of *logical shards*, each an independent ``RandServer`` + journal.  A
+host usually starts owning exactly one shard; after a peer dies it
+*adopts* the dead shard — takes the journal's exclusive flock (the
+fencing step: the OS grants it only once the owner is truly gone),
+fences the journaled windows off a fresh ledger, and resumes that
+shard's tenant regions bit-identically.  The scripted fault layer
+(``runtime.fault.FaultInjector``) hooks the request path so kill /
+hang / drop / slow adversaries run deterministically in CI.
+"""
+from __future__ import annotations
+
+import base64
+import json
+import os
+import socket
+import struct
+import sys
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.fault import FaultInjector, rid_index
+from repro.service import audit
+from repro.service.frontend import RandRequest
+from repro.service.server import RandServer, ServerConfig
+
+_HEADER = struct.Struct("!I")
+
+#: default cap on one frame's JSON payload (requests and responses are
+#: far smaller; the cap exists so a hostile length prefix cannot make
+#: the server allocate unbounded memory)
+MAX_FRAME = 16 << 20
+
+
+class TransportError(RuntimeError):
+    """Base of the wire-level failure modes."""
+
+
+class FrameTooLarge(TransportError):
+    """Declared frame length exceeds the negotiated cap."""
+
+
+class TornFrame(TransportError):
+    """Peer vanished mid-frame (partial header or body)."""
+
+
+class WireError(RuntimeError):
+    """A structured error frame from the server (``kind`` + message)."""
+
+    def __init__(self, kind: str, message: str):
+        super().__init__(message)
+        self.kind = kind
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+def send_frame(sock: socket.socket, obj: Dict[str, Any], *,
+               max_frame: int = MAX_FRAME) -> None:
+    """Serialize ``obj`` and write one length-prefixed frame."""
+    data = json.dumps(obj, sort_keys=True).encode("utf-8")
+    if len(data) > max_frame:
+        raise FrameTooLarge(
+            f"frame of {len(data)} bytes exceeds cap {max_frame}")
+    sock.sendall(_HEADER.pack(len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """``n`` bytes or None on EOF at offset 0; TornFrame on EOF mid-read."""
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if not buf:
+                return None
+            raise TornFrame(
+                f"peer closed after {len(buf)} of {n} bytes")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket, *,
+               max_frame: int = MAX_FRAME) -> Optional[Dict[str, Any]]:
+    """Read one frame; ``None`` on clean EOF at a frame boundary.
+
+    Raises :class:`TornFrame` on a mid-frame disconnect and
+    :class:`FrameTooLarge` when the declared length exceeds the cap
+    (after which the stream is unrecoverable — close the socket).
+    """
+    head = _recv_exact(sock, _HEADER.size)
+    if head is None:
+        return None
+    (length,) = _HEADER.unpack(head)
+    if length > max_frame:
+        raise FrameTooLarge(
+            f"declared frame length {length} exceeds cap {max_frame}")
+    body = _recv_exact(sock, length)
+    if body is None:        # EOF right after the header: torn, not clean
+        raise TornFrame(f"peer closed before {length}-byte body")
+    return json.loads(body.decode("utf-8"))
+
+
+# ---------------------------------------------------------------------------
+# Array + request encoding
+# ---------------------------------------------------------------------------
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes        # jax dependency: bfloat16 and friends
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode_array(a: np.ndarray) -> Dict[str, Any]:
+    """JSON-able form of an array: dtype name, shape, base64 bytes."""
+    a = np.asarray(a)
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def decode_array(d: Dict[str, Any]) -> np.ndarray:
+    """Inverse of :func:`encode_array`, byte-exact."""
+    raw = base64.b64decode(d["data"])
+    return np.frombuffer(raw, dtype=_resolve_dtype(d["dtype"])) \
+             .reshape(tuple(d["shape"]))
+
+
+def request_to_wire(req: RandRequest, shard: int) -> Dict[str, Any]:
+    return {"op": "request", "shard": int(shard), "rid": req.rid,
+            "tenant": req.tenant_id, "shape": list(req.shape),
+            "sampler": req.sampler, "dtype": req.out_dtype}
+
+
+def request_from_wire(msg: Dict[str, Any]) -> RandRequest:
+    return RandRequest(tenant_id=msg["tenant"],
+                       shape=tuple(int(d) for d in msg["shape"]),
+                       sampler=msg["sampler"], out_dtype=msg["dtype"],
+                       rid=msg["rid"])
+
+
+# ---------------------------------------------------------------------------
+# ShardHost: one fleet process
+# ---------------------------------------------------------------------------
+
+class _DropReply(Exception):
+    """Scripted drop-frame fault: close the connection instead of
+    replying (the request WAS served and journaled)."""
+
+
+class ShardHost:
+    """TCP host for one or more logical RandService shards.
+
+    Every logical shard is a full ``RandServer`` over the *same* global
+    plan (same seed): which tenants a shard serves is decided entirely
+    by the client-side hash ring, so any host can adopt any shard —
+    state is (seed, journal), nothing else.
+    """
+
+    def __init__(self, seed: int, *, host: str = "127.0.0.1",
+                 port: int = 0, config: Optional[ServerConfig] = None,
+                 injector: Optional[FaultInjector] = None,
+                 backend: Optional[str] = None,
+                 max_frame: int = MAX_FRAME):
+        self.seed = seed
+        self.config = config or ServerConfig(max_batch=1,
+                                             max_delay_s=0.0)
+        self.injector = injector
+        self.backend = backend
+        self.max_frame = max_frame
+        self._servers: Dict[int, RandServer] = {}
+        self._journals: Dict[int, audit.Journal] = {}
+        self._adopted: set = set()
+        self._hung = threading.Event()
+        self._lock = threading.Lock()
+        self._closing = threading.Event()
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(64)
+        # poll the listener: closing a socket does NOT wake a thread
+        # blocked in accept() on Linux, so a timeout is the only way
+        # close() can reliably retire the accept thread (accepted conns
+        # come out blocking: stdlib accept() resets inherited timeouts)
+        self._sock.settimeout(0.2)
+        self.address: Tuple[str, int] = self._sock.getsockname()
+        self._conns: set = set()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="shardhost-accept", daemon=True)
+        self._accept_thread.start()
+
+    # -- shard lifecycle ---------------------------------------------------
+
+    def add_shard(self, shard: int,
+                  journal_path: Optional[str] = None) -> RandServer:
+        """Open logical shard ``shard`` on this host (initial ownership)."""
+        journal = (audit.Journal(journal_path)
+                   if journal_path is not None else None)
+        srv = RandServer(self.seed, config=self.config, journal=journal,
+                         backend=self.backend)
+        with self._lock:
+            self._servers[shard] = srv
+            if journal is not None:
+                self._journals[shard] = journal
+        return srv
+
+    def adopt(self, shard: int, journal_path: str) -> RandServer:
+        """Take over a dead peer's shard: lock its journal (fencing —
+        raises ``JournalLockedError`` while the owner still lives),
+        fence the journaled windows, resume its tenant regions.
+        """
+        journal = audit.Journal(journal_path)     # flock = the fence
+        try:
+            srv = RandServer(self.seed, config=self.config,
+                             journal=journal, backend=self.backend)
+            # belt over braces: raise the lease floor to the journaled
+            # high-water mark so even explicit at= leases cannot land
+            # below what the dead shard may have served
+            journal.restore_into(srv.block_service, fence=True)
+        except Exception:
+            journal.close()
+            raise
+        with self._lock:
+            self._servers[shard] = srv
+            self._journals[shard] = journal
+            # the scripted adversary targets a shard's ORIGINAL owner;
+            # without this, every process's injector would re-fire the
+            # same spec when the retried request reaches the adopter —
+            # a scripted single kill would cascade through the fleet
+            self._adopted.add(shard)
+        return srv
+
+    def shards(self) -> Tuple[int, ...]:
+        with self._lock:
+            return tuple(sorted(self._servers))
+
+    # -- accept/serve loops ------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._closing.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue            # poll tick: re-check _closing
+            except OSError:
+                break               # listener closed by close()
+            with self._lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name="shardhost-conn", daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._closing.is_set():
+                try:
+                    msg = recv_frame(conn, max_frame=self.max_frame)
+                except FrameTooLarge as e:
+                    # the stream cannot be resynced after a bad length:
+                    # best-effort error frame, then close
+                    try:
+                        send_frame(conn, {"ok": False,
+                                          "kind": "frame_too_large",
+                                          "error": str(e)})
+                    except OSError:
+                        pass
+                    return
+                except (TornFrame, OSError):
+                    return          # torn client write: drop the conn only
+                if msg is None:
+                    return          # clean EOF
+                try:
+                    reply = self._dispatch(msg)
+                except _DropReply:
+                    return          # scripted fault: vanish without reply
+                except Exception as e:   # noqa: BLE001 — reply, don't die
+                    reply = {"ok": False, "kind": "server_error",
+                             "error": f"{type(e).__name__}: {e}"}
+                try:
+                    send_frame(conn, reply, max_frame=self.max_frame)
+                except OSError:
+                    return
+        finally:
+            with self._lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    # -- op handlers -------------------------------------------------------
+
+    def _dispatch(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        op = msg.get("op")
+        if op == "request":
+            return self._handle_request(msg)
+        if op == "adopt":
+            return self._handle_adopt(msg)
+        if op == "stats":
+            return self._handle_stats(msg)
+        if op == "ping":
+            return {"ok": True, "op": "ping", "shards": list(self.shards())}
+        return {"ok": False, "kind": "bad_request",
+                "error": f"unknown op {op!r}"}
+
+    def _shard_server(self, msg) -> Tuple[int, RandServer]:
+        shard = int(msg.get("shard", -1))
+        with self._lock:
+            srv = self._servers.get(shard)
+        if srv is None:
+            raise WireError("not_owner",
+                            f"shard {shard} is not hosted here "
+                            f"(have {list(self.shards())})")
+        return shard, srv
+
+    def _handle_request(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        try:
+            shard, srv = self._shard_server(msg)
+        except WireError as e:
+            return {"ok": False, "kind": e.kind, "error": str(e)}
+        req = request_from_wire(msg)
+        if self._hung.is_set():
+            # a hung host is wedged for good: every request (including
+            # reconnect retries) stalls, holding the journal flock —
+            # only fencing (SIGKILL) + peer adoption recovers the shard
+            time.sleep(3600.0)
+        drop_after = False
+        if self.injector is not None and shard not in self._adopted:
+            spec = self.injector.fire(shard, rid_index(req.rid))
+            if spec is not None:
+                if spec.kind == "kill":
+                    # SIGKILL semantics: no unwind, no journal write for
+                    # this request, flock released by the kernel
+                    os._exit(137)
+                elif spec.kind == "hang":
+                    self._hung.set()
+                    time.sleep(3600.0)
+                elif spec.kind == "slow":
+                    time.sleep(spec.seconds)
+                elif spec.kind == "drop":
+                    drop_after = True
+        journal = self._journals.get(shard)
+        if journal is not None and req.rid is not None:
+            entry = journal.find_request(req.rid)
+            if entry is not None:
+                # idempotent retry: the assignment is durable — replay
+                # it instead of serving a second window
+                a = audit.replay_entry(entry, seed=self.seed,
+                                       backend=self.backend or "xla")
+                return {"ok": True, "rid": req.rid, "replayed": True,
+                        "array": encode_array(a)}
+        result = srv.submit(req).result(timeout=600)
+        if drop_after:
+            raise _DropReply()
+        return {"ok": True, "rid": req.rid, "replayed": False,
+                "array": encode_array(result)}
+
+    def _handle_adopt(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        shard = int(msg["shard"])
+        with self._lock:
+            if shard in self._servers:
+                return {"ok": True, "shard": shard, "already": True}
+        try:
+            self.adopt(shard, msg["journal"])
+        except audit.JournalLockedError as e:
+            return {"ok": False, "kind": "locked", "error": str(e)}
+        return {"ok": True, "shard": shard, "already": False}
+
+    def _handle_stats(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        try:
+            shard, srv = self._shard_server(msg)
+        except WireError as e:
+            return {"ok": False, "kind": e.kind, "error": str(e)}
+        return {"ok": True, "shard": shard, "stats": srv.stats()}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self, timeout: Optional[float] = 60.0) -> None:
+        """Stop accepting, drain every hosted shard, close journals,
+        and retire every transport thread — an in-process host must not
+        leak accept/conn threads into its embedder."""
+        self._closing.set()
+        self._accept_thread.join(timeout=5.0)
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._lock:
+            servers = list(self._servers.values())
+        for srv in servers:
+            srv.shutdown(timeout)
+        # idle persistent connections sit blocked in recv; close() alone
+        # does not wake them, shutdown() delivers EOF and does
+        with self._lock:
+            conns, self._conns = list(self._conns), set()
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def __enter__(self) -> "ShardHost":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Client-side RPC helper
+# ---------------------------------------------------------------------------
+
+def rpc(address: Tuple[str, int], msg: Dict[str, Any], *,
+        timeout: Optional[float] = 60.0,
+        max_frame: int = MAX_FRAME) -> Dict[str, Any]:
+    """One-shot request/response against a ShardHost (fresh connection)."""
+    with socket.create_connection(address, timeout=timeout) as sock:
+        send_frame(sock, msg, max_frame=max_frame)
+        reply = recv_frame(sock, max_frame=max_frame)
+    if reply is None:
+        raise TornFrame(f"no reply from {address}")
+    return reply

@@ -16,6 +16,29 @@ except ImportError:
     _hypothesis_fallback.install()
 
 
+# Every cached XLA executable pins a handful of memory mappings, and a
+# full-suite process accumulates ~200 of them per test: around the
+# ~310-test mark the process crosses vm.max_map_count (65530 on stock
+# Linux) and the next mmap() inside LLVM fails — jaxlib takes that as a
+# SIGSEGV mid-compile, killing the whole run. Dropping the jit caches
+# every batch of tests keeps the map count bounded (clearing releases
+# ~90% of the accumulated mappings); the only cost is recompiles.
+_CLEAR_EVERY = 25
+_test_counter = {"n": 0}
+
+
+@pytest.fixture(autouse=True)
+def _bound_xla_map_count():
+    yield
+    _test_counter["n"] += 1
+    if _test_counter["n"] % _CLEAR_EVERY == 0:
+        try:
+            import jax
+            jax.clear_caches()
+        except ImportError:
+            pass
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0xC0FFEE)

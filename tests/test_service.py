@@ -14,8 +14,9 @@ The acceptance properties as executable tests:
     bit-identically, and the restarted service's new windows stay
     disjoint from everything replayed,
   * shutdown is a graceful drain: queued requests are served, late
-    submissions are refused, SIGINT on ``python -m repro.service``
-    drains and exits cleanly.
+    submissions are refused, SIGINT or SIGTERM on
+    ``python -m repro.service`` drains and exits cleanly, and
+    ``drain(timeout=None)`` waits for completion rather than bailing.
 """
 import os
 import signal
@@ -23,6 +24,7 @@ import subprocess
 import sys
 import threading
 import time
+from typing import Tuple
 
 import numpy as np
 import pytest
@@ -528,8 +530,9 @@ def test_submit_backpressure_does_not_deadlock_drain():
     assert "err" in blocked or blocked["fut"].result(30).shape == (8,)
 
 
-def test_sigint_graceful_drain():
-    """``python -m repro.service --linger``: SIGINT drains and exits 0."""
+def _drain_via_signal(sig) -> Tuple[int, str]:
+    """Run ``python -m repro.service --linger``, deliver ``sig`` once
+    ready, return (returncode, output)."""
     env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     proc = subprocess.Popen(
         [sys.executable, "-m", "repro.service", "--burst", "16",
@@ -540,15 +543,41 @@ def test_sigint_graceful_drain():
         deadline = time.time() + 180
         ready = False
         for line in proc.stdout:
-            if "ready (SIGINT to drain)" in line:
+            if "ready (SIGINT/SIGTERM to drain)" in line:
                 ready = True
                 break
             assert time.time() < deadline, "server never became ready"
         assert ready
-        proc.send_signal(signal.SIGINT)
+        proc.send_signal(sig)
         out, _ = proc.communicate(timeout=60)
     finally:
         if proc.poll() is None:
             proc.kill()
-    assert proc.returncode == 0, out
+    return proc.returncode, out
+
+
+def test_sigint_graceful_drain():
+    """``python -m repro.service --linger``: SIGINT drains and exits 0."""
+    rc, out = _drain_via_signal(signal.SIGINT)
+    assert rc == 0, out
     assert "drained" in out
+
+
+def test_sigterm_graceful_drain():
+    """SIGTERM (what supervisors and ``fleet.Fleet.stop`` send) takes
+    the same graceful-drain path as SIGINT."""
+    rc, out = _drain_via_signal(signal.SIGTERM)
+    assert rc == 0, out
+    assert "drained" in out
+
+
+def test_drain_timeout_none_waits_forever():
+    """``drain(timeout=None)`` means "wait until drained", not "give
+    up immediately" — it must return True with all work served."""
+    srv = RandServer(11, config=ServerConfig(max_batch=4), start=False)
+    futs = [srv.submit(RandRequest("t", (64,), rid=f"n{i}"))
+            for i in range(8)]
+    assert srv.drain(timeout=None) is True
+    assert all(f.result(30).shape == (64,) for f in futs)
+    # a second drain is idempotent and still reports drained
+    assert srv.drain(timeout=None) is True
