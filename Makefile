@@ -24,12 +24,12 @@ service:           ## RandService: 1024-tenant burst + replay check, then serve 
 service-smoke:     ## RandService burst bench rows only (service/* in BENCH_throughput.json)
 	$(PY) -m benchmarks.throughput service
 
-fleet:             ## 2-shard wire fleet: kill-mid-burst failover, digest vs no-fault, union replay
+fleet:             ## 2-shard wire fleet (pipelined binary clients, coalescing+pools on): kill-mid-burst failover, digest vs no-fault, union replay
 	rm -rf /tmp/repro-fleet
 	$(PY) -m repro.service --fleet 2 --burst 256 --tenants 64 \
 	    --journal-dir /tmp/repro-fleet --fault-plan kill@128 --verify-replay
 
-fleet-smoke:       ## fleet bench rows (mixed/hammer/unique/kill; fleet/* in BENCH_throughput.json)
+fleet-smoke:       ## fleet bench rows (binary/json pair, hammer/unique/kill; fleet/* in BENCH_throughput.json)
 	$(PY) -m benchmarks.throughput fleet
 
 roofline:          ## roofline smoke + regression gate (merges roofline/* rows, fails if fused/donated regress)

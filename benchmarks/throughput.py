@@ -381,36 +381,84 @@ def service_smoke(out=print, records=None, *, burst: int = 192,
 def fleet_smoke(out=print, records=None, *, burst: int = 96,
                 tenants: int = 32, shards: int = 2) -> None:
     """Wire-level fleet rows: the adversarial traffic suite over
-    subprocess shards + socket transport.
+    subprocess shards + socket transport, with pipelined clients,
+    microbatch coalescing and standing pools in the shards.
 
-    Variants: ``mixed`` (baseline spread), ``hammer`` (every request
-    from ONE tenant — no routing spread, one shard absorbs the burst),
-    ``unique`` (every request a distinct shape — zero coalescing), and
-    ``kill`` (mixed traffic with a scripted kill at the burst midpoint:
-    the row's ``recovery_ms`` is the failover cost, and the response
-    digest is asserted equal to the no-fault run — the failover
-    correctness check as a benchmark side effect).
+    Accounting: warm variants run an untimed warm-up burst first
+    (rids prefixed ``warm/`` so they never collide with the timed
+    burst in the journal), then reset both client- and shard-side
+    metrics — so the row is steady-state serving cost with the
+    first-connect/handshake/jit split out (reported as
+    ``compile_us``).  The ``kill`` pair runs COLD: warm-up rids parse
+    through ``rid_index`` and would fire the scripted injector early.
+
+    Variants: ``binary`` vs ``json`` (same array-heavy traffic, wire
+    v2 vs v1 — the transport speedup pair CI gates on), ``hammer``
+    (every request from ONE tenant — no routing spread), ``unique``
+    (every request a distinct shape — zero class coalescing), and
+    ``kill`` (mixed traffic, scripted kill at the burst midpoint:
+    ``recovery_ms`` is the failover cost and the response digest is
+    asserted equal to the cold no-fault run — the failover correctness
+    check as a benchmark side effect, now with pools + coalescing +
+    pipelining all on).
     """
     import tempfile
     import time as _time
 
     from repro.runtime.fault import FaultPlan
+    from repro.service import transport
     from repro.service.audit import response_digest
     from repro.service.burst import make_requests
     from repro.service.fleet import Fleet, FleetConfig, run_fleet_burst
 
-    def one(variant: str, pattern: str, plan: FaultPlan):
+    def reset_fleet(client) -> None:
+        for logical, proc in sorted(client._owner.items()):
+            transport.rpc(client.addresses[proc],
+                          {"op": "reset", "shard": logical}, timeout=10.0)
+        client.reset_metrics()
+
+    def shard_counters(client) -> dict:
+        engine = leases = served = pooled = 0
+        for logical, proc in sorted(client._owner.items()):
+            try:
+                reply = transport.rpc(client.addresses[proc],
+                                      {"op": "stats", "shard": logical},
+                                      timeout=10.0)
+            except (OSError, transport.TransportError):
+                continue            # fenced/dead owner
+            if reply.get("ok"):
+                s = reply["stats"]
+                engine += s.get("engine_calls", 0)
+                leases += s.get("lease_calls", 0)
+                served += s.get("requests_served", 0)
+                pooled += s.get("pool_requests", 0)
+        return {"coalesce_calls_per_req": ((engine + leases) / served
+                                           if served else 0.0),
+                "pool_hit_rate": pooled / served if served else 0.0}
+
+    def one(variant: str, pattern: str, plan: FaultPlan, *,
+            binary: bool = True, warm: bool = True, max_side: int = 64):
         with tempfile.TemporaryDirectory() as jdir:
             cfg = FleetConfig(num_shards=shards, seed=31,
                               journal_dir=jdir)
             reqs = make_requests(burst=burst, tenants=tenants, seed=2,
-                                 pattern=pattern)
+                                 pattern=pattern, max_side=max_side)
             with Fleet(cfg, plan) as fleet:
-                client = fleet.client()
+                client = fleet.client(binary=binary)
+                warm_s = 0.0
+                if warm:
+                    t0 = _time.perf_counter()
+                    run_fleet_burst(client, make_requests(
+                        burst=burst, tenants=tenants, seed=2,
+                        pattern=pattern, max_side=max_side,
+                        rid_prefix="warm"))
+                    warm_s = _time.perf_counter() - t0
+                    reset_fleet(client)
                 t0 = _time.perf_counter()
                 got = run_fleet_burst(client, reqs)
                 wall = _time.perf_counter() - t0
                 stats = client.stats()
+                stats.update(shard_counters(client))
                 client.close()
         assert len(got) == burst
         digest = response_digest(got)
@@ -419,29 +467,99 @@ def fleet_smoke(out=print, records=None, *, burst: int = 96,
         out(row(f"fleet/{variant}/burst={burst}", wall / burst * 1e6,
                 f"{rps:.0f} req/s p50={stats['latency_p50_ms']:.1f}ms "
                 f"p99={stats['latency_p99_ms']:.1f}ms "
-                f"retries={stats['retries']} "
-                f"failovers={stats['failovers']}"
+                f"{stats['bytes_on_wire_per_req']:.0f} B/req "
+                f"{stats['coalesce_calls_per_req']:.2f} calls/req "
+                f"pool={stats['pool_hit_rate']:.2f}"
                 + (f" recovery={rec_ms:.0f}ms" if rec_ms is not None
                    else "")))
         _record(records, name=f"fleet/{variant}/burst={burst}",
                 backend="fleet", sampler="mixed", dtype="mixed",
                 variant=variant, num_streams=tenants, num_steps=burst,
                 us_per_call=wall / burst * 1e6,
+                compile_us=warm_s * 1e6,
                 requests_per_s=rps,
                 latency_p50_ms=stats["latency_p50_ms"],
                 latency_p99_ms=stats["latency_p99_ms"],
                 retries=stats["retries"], failovers=stats["failovers"],
-                recovery_ms=rec_ms)
-        return digest
+                recovery_ms=rec_ms,
+                bytes_on_wire_per_req=stats["bytes_on_wire_per_req"],
+                coalesce_calls_per_req=stats["coalesce_calls_per_req"],
+                pool_hit_rate=stats["pool_hit_rate"])
+        return digest, rps
 
-    baseline = one("mixed", "mixed", FaultPlan())
+    def wire_pair():
+        """Transport-isolated array-heavy pair: framed round-trips of
+        1 MiB-array replies over a socketpair, v2 vs v1.  This is the
+        layer the binary format accelerates (no serving cost mixed
+        in) — the CI ``fleet-perf`` gate asserts v2 >= 2x v1 here."""
+        import socket as _socket
+        import threading as _threading
+
+        arr = (np.arange(512 * 512, dtype=np.uint32)
+               .astype(np.float32).reshape(512, 512))
+        frames = 32
+        for variant, ver in (("wire-binary", transport.WIRE_V2),
+                             ("wire-json", transport.WIRE_V1)):
+            a, b = _socket.socketpair()
+            a.settimeout(60.0); b.settimeout(60.0)
+            got = []
+
+            def pump():
+                for _ in range(frames):
+                    msg, _v = transport.recv_wire(b)
+                    got.append(transport.reply_array(msg))
+
+            t = _threading.Thread(target=pump, daemon=True)
+            t.start()
+            t0 = _time.perf_counter()
+            sent = 0
+            for i in range(frames):
+                sent += transport.send_wire(
+                    a, {"ok": True, "rid": f"w/{i}", "array": arr},
+                    version=ver)
+            t.join(timeout=120)
+            wall = _time.perf_counter() - t0
+            a.close(); b.close()
+            assert len(got) == frames
+            assert got[0].tobytes() == arr.tobytes()
+            rps = frames / wall
+            out(row(f"fleet/{variant}/frames={frames}",
+                    wall / frames * 1e6,
+                    f"{rps:.0f} frames/s "
+                    f"{sent / frames / 1e6:.2f} MB/frame "
+                    f"{sent / wall / 1e9:.2f} GB/s"))
+            _record(records, name=f"fleet/{variant}/frames={frames}",
+                    backend="fleet", sampler="bits", dtype="float32",
+                    variant=variant, num_streams=1, num_steps=frames,
+                    us_per_call=wall / frames * 1e6,
+                    requests_per_s=rps,
+                    bytes_on_wire_per_req=sent / frames,
+                    gbytes_per_s=sent / wall / 1e9)
+
+    wire_pair()
+    # end-to-end pair: identical array-heavy traffic, wire v2 vs v1 —
+    # asserts payload transparency (serving cost dominates this scale,
+    # so the e2e ratio is informational; the gate reads the wire pair)
+    bin_digest, bin_rps = one("binary", "mixed", FaultPlan(),
+                              binary=True, max_side=128)
+    json_digest, json_rps = one("json", "mixed", FaultPlan(),
+                                binary=False, max_side=128)
+    assert bin_digest == json_digest, (
+        "binary v2 responses diverged from JSON v1 — wire framing is "
+        "NOT payload-transparent")
+    out(f"# fleet: binary/json steady-state speedup "
+        f"{bin_rps / json_rps:.2f}x e2e (digests equal)")
     one("hammer", "hammer", FaultPlan())
     one("unique", "unique", FaultPlan())
-    killed = one("kill", "mixed", FaultPlan.parse(f"kill@{burst // 2}"))
+    # kill pair runs cold (no warm-up: warm rids would fire the injector)
+    baseline, _ = one("nofault", "mixed", FaultPlan(), warm=False)
+    killed, _ = one("kill", "mixed",
+                    FaultPlan.parse(f"kill@{burst // 2}"), warm=False)
     assert killed == baseline, (
         "kill-mid-burst digest diverged from the no-fault run — "
         "failover is NOT bit-identical")
-    out("# fleet: kill-mid-burst digest == no-fault digest (bit-identical)")
+    out("# fleet: kill-mid-burst digest == no-fault digest "
+        "(bit-identical, pools+coalescing+pipelining on)")
 
 
 SMOKES = {

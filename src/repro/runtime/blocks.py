@@ -591,6 +591,27 @@ class BlockService:
             return fn(*args, retired)
         return fn(*args)
 
+    def regenerate(self, name: str, lo: int, length: int, *,
+                   sampler: Optional[str] = None,
+                   out_dtype: Optional[str] = None) -> Any:
+        """The block for an ALREADY-durable window — no lease, no ledger.
+
+        Restart/failover re-enters the middle of a journaled window
+        (e.g. a standing pool's current block) through this: the window
+        is already committed (and fenced) from the journal, so the new
+        owner regenerates its bytes — bit-identical by counter
+        addressing — without touching the accounting.  Leasing it again
+        would (correctly) raise ``LeaseError``; that refusal is exactly
+        why this path must not lease.
+        """
+        ch = self._channels[name]
+        if ch.window_fn is not None:
+            return ch.window_fn(lo, lo + length)
+        s = ch.sampler if sampler is None else sampler
+        d = ch.out_dtype if out_dtype is None else out_dtype
+        fn = self._window_fn(ch, length, s, d)
+        return fn(*self._ctr_args(lo))
+
     def take(self, name: str, length: int, **kw) -> Any:
         """lease + generate + commit in one call (synchronous consumers)."""
         lease = self.lease(name, length)

@@ -21,10 +21,13 @@ in-process server; ``--fault-plan`` scripts the adversary:
   PYTHONPATH=src python -m repro.service --fleet 2 --burst 1024 \\
       --tenants 256 --journal-dir /tmp/fleet --fault-plan kill@512
 
-Because every shard serves its request subsequence in order against
-the same global plan, the printed digest is identical with and without
-the fault plan — that equality is the failover correctness check CI
-runs three times in a row.
+Shards coalesce (``--fleet-max-batch``), keep standing producer pools
+(``--fleet-hot``), and speak binary v2 wire frames to a pipelined
+client (``--pipeline-depth``) — yet the printed digest is identical
+with and without the fault plan, because each shard's microbatch
+composition is journaled atomically before responses release and the
+client resubmits unanswered requests in original order.  That equality
+is the failover correctness check CI runs three times in a row.
 """
 from __future__ import annotations
 
@@ -39,6 +42,36 @@ from repro.service.server import (RandServer, ServerConfig,
                                   drain_signal_event)
 
 
+def _shard_stats(client) -> dict:
+    """Aggregate serving-side counters (engine calls, pool hits) over
+    every live shard owner — the CI coalescing gate reads these."""
+    from repro.service import transport
+
+    engine = leases = served = pooled = 0
+    for logical, proc in sorted(client._owner.items()):
+        try:
+            reply = transport.rpc(client.addresses[proc],
+                                  {"op": "stats", "shard": logical},
+                                  timeout=10.0)
+        except (OSError, transport.TransportError):
+            continue                # fenced/dead owner: skip
+        if not reply.get("ok"):
+            continue
+        s = reply["stats"]
+        engine += s.get("engine_calls", 0)
+        leases += s.get("lease_calls", 0)
+        served += s.get("requests_served", 0)
+        pooled += s.get("pool_requests", 0)
+    return {
+        "engine_calls": engine,
+        "lease_calls": leases,
+        "requests_served": served,
+        "coalesce_calls_per_req": ((engine + leases) / served
+                                   if served else 0.0),
+        "pool_hit_rate": (pooled / served if served else 0.0),
+    }
+
+
 def _run_fleet(args) -> int:
     """The ``--fleet N`` path: subprocess shards, socket transport,
     scripted faults, digest + optional union replay over the shard
@@ -47,9 +80,15 @@ def _run_fleet(args) -> int:
     from repro.service.fleet import Fleet, FleetConfig, run_fleet_burst
 
     plan = FaultPlan.parse(args.fault_plan)
+    hot = tuple(tuple(p.split(":", 1))
+                for p in args.fleet_hot.split(",") if p)
     fcfg = FleetConfig(num_shards=args.fleet, seed=args.seed,
                        journal_dir=args.journal_dir,
-                       max_batch=1, queue_depth=max(4096, args.burst))
+                       max_batch=args.fleet_max_batch,
+                       pipeline_depth=args.pipeline_depth,
+                       binary=not args.no_binary,
+                       hot_classes=hot,
+                       queue_depth=max(4096, args.burst))
     reqs = make_requests(burst=args.burst, tenants=args.tenants,
                          seed=args.seed, pattern=args.pattern)
     with Fleet(fcfg, plan) as fleet:
@@ -58,6 +97,7 @@ def _run_fleet(args) -> int:
         responses = run_fleet_burst(client, reqs)
         wall_s = time.perf_counter() - t0
         cstats = client.stats()
+        cstats.update(_shard_stats(client))
         client.close()
         journals = fleet.journals()
         fleet.stop()
@@ -72,6 +112,13 @@ def _run_fleet(args) -> int:
           f"retries={cstats['retries']} failovers={cstats['failovers']}"
           + (f" recovery={cstats['recovery_ms']:.0f}ms"
              if cstats["recovery_ms"] is not None else ""))
+    print(f"coalescing: {cstats['engine_calls']} engine calls + "
+          f"{cstats['lease_calls']} leases for "
+          f"{cstats['requests_served']} requests "
+          f"({cstats['coalesce_calls_per_req']:.3f} calls/request, "
+          f"pool hit rate {cstats['pool_hit_rate']:.3f})")
+    print(f"wire: {cstats['bytes_on_wire_per_req']:.0f} bytes/req "
+          f"({'binary v2' if not args.no_binary else 'json v1'})")
     print(f"digest {digest}")
 
     rc = 0
@@ -123,6 +170,16 @@ def main(argv=None) -> int:
                          "repro.runtime.fault.FaultPlan.parse)")
     ap.add_argument("--journal-dir", default="/tmp/repro-fleet",
                     help="fleet mode: per-shard journal/log directory")
+    ap.add_argument("--fleet-max-batch", type=int, default=32,
+                    help="fleet mode: per-shard microbatch size "
+                         "(composition is journaled, so >1 is safe)")
+    ap.add_argument("--pipeline-depth", type=int, default=32,
+                    help="fleet mode: client in-flight window per shard")
+    ap.add_argument("--no-binary", action="store_true",
+                    help="fleet mode: force JSON v1 wire frames")
+    ap.add_argument("--fleet-hot", default="bits:float32,uniform:float32",
+                    help="fleet mode: comma-joined sampler:dtype pool "
+                         "classes ('' disables standing pools)")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--max-delay", type=float, default=0.25,
                     help="microbatch deadline seconds (generous default "

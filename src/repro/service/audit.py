@@ -13,7 +13,16 @@ of records:
     with every consumed window still fenced off), and
   * ``request`` — one per served request (the
     ``frontend.Assignment``), flushed+fsynced before the response is
-    released to the caller.
+    released to the caller, and
+  * ``batch``   — one per served *microbatch* (group commit): the
+    batch's composition (its request assignments, in batch order) plus
+    every window it consumed, as ONE JSON line.  A single line is
+    atomic under the torn-tail repair — either the whole batch is
+    durable or none of it is — so a crashed server's journal is always
+    batch-aligned, which is what lets a failover peer re-form the
+    identical microbatches (and hence identical assignments) for the
+    un-journaled suffix.  One record = one write = one fsync per
+    batch instead of one per request.
 
 ``replay`` regenerates every journaled response through plain
 ``engine.generate`` — deliberately NOT the coalescer's cached fused
@@ -27,7 +36,7 @@ import functools
 import hashlib
 import json
 import os
-from typing import Any, Dict, Iterable, List, Optional, Union
+from typing import Any, Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -39,6 +48,28 @@ try:                               # POSIX only; fencing degrades to a
     import fcntl                   # no-op where flock does not exist
 except ImportError:                # pragma: no cover - non-POSIX
     fcntl = None
+
+
+def _request_record(a: Assignment) -> Dict[str, Any]:
+    """The JSON-able journal form of one assignment (shared by the
+    per-request ``request`` records and the members of ``batch``
+    records, so ``replay_entry`` handles both identically)."""
+    return {"kind": "request", "rid": a.rid,
+            "tenant": a.tenant_id, "sampler": a.sampler,
+            "dtype": a.out_dtype, "shape": list(a.shape),
+            "channel": a.channel, "lo": int(a.lo),
+            "rows": int(a.rows), "tags": [int(t) for t in a.tags],
+            "deco": a.deco}
+
+
+def _iter_requests(entries: Iterable[Dict[str, Any]]
+                   ) -> Iterable[Dict[str, Any]]:
+    """Every request record in ``entries``, expanding batch records."""
+    for e in entries:
+        if e["kind"] == "request":
+            yield e
+        elif e["kind"] == "batch":
+            yield from e["requests"]
 
 
 class JournalLockedError(RuntimeError):
@@ -148,12 +179,26 @@ class Journal:
 
     def append_request(self, a: Assignment) -> None:
         """Record one served request's assignment."""
-        self._append({"kind": "request", "rid": a.rid,
-                      "tenant": a.tenant_id, "sampler": a.sampler,
-                      "dtype": a.out_dtype, "shape": list(a.shape),
-                      "channel": a.channel, "lo": int(a.lo),
-                      "rows": int(a.rows), "tags": [int(t) for t in a.tags],
-                      "deco": a.deco})
+        self._append(_request_record(a))
+
+    def append_batch(self, assignments: List[Assignment],
+                     windows: Iterable[Tuple[str, int, int]]) -> None:
+        """Record one served microbatch as ONE atomic line (group commit).
+
+        ``assignments`` is the batch's composition in batch order;
+        ``windows`` the (channel, lo, hi) counter windows the batch
+        consumed (class-channel leases and freshly pulled pool blocks).
+        The torn-tail repair drops a partial line wholly, so a journal
+        can never hold half a batch — the invariant the fleet's
+        deterministic-handoff protocol rests on.
+        """
+        self._append({
+            "kind": "batch",
+            "rids": sorted(a.rid for a in assignments),
+            "windows": [{"channel": c, "lo": int(lo), "hi": int(hi)}
+                        for c, lo, hi in windows],
+            "requests": [_request_record(a) for a in assignments],
+        })
 
     def flush(self) -> None:
         """Make everything appended so far durable (fsync) — called by
@@ -171,7 +216,8 @@ class Journal:
             self._fh = None
 
     def requests(self) -> List[Dict[str, Any]]:
-        return [e for e in self._entries if e["kind"] == "request"]
+        """Every request record, batch members expanded in batch order."""
+        return list(_iter_requests(self._entries))
 
     def find_request(self, rid: str) -> Optional[Dict[str, Any]]:
         """The journaled request record for ``rid`` (``None`` if never
@@ -181,12 +227,19 @@ class Journal:
         while self._rid_cursor < len(self._entries):
             e = self._entries[self._rid_cursor]
             self._rid_cursor += 1
-            if e["kind"] == "request":
-                self._rid_entries[e["rid"]] = e
+            for r in _iter_requests([e]):
+                self._rid_entries[r["rid"]] = r
         return self._rid_entries.get(rid)
 
     def windows(self) -> List[Dict[str, Any]]:
-        return [e for e in self._entries if e["kind"] == "window"]
+        """Every window record, batch-consumed windows expanded."""
+        out: List[Dict[str, Any]] = []
+        for e in self._entries:
+            if e["kind"] == "window":
+                out.append(e)
+            elif e["kind"] == "batch":
+                out.extend(e["windows"])
+        return out
 
     def ledger_state(self) -> Dict[str, Any]:
         """The ``BlockService.restore_ledger`` state implied by the
@@ -259,9 +312,7 @@ def replay(journal: Union[Journal, str, Iterable[Dict[str, Any]]], *,
         True
     """
     out: Dict[str, np.ndarray] = {}
-    for e in _entries_of(journal):
-        if e["kind"] != "request":
-            continue
+    for e in _iter_requests(_entries_of(journal)):
         out[e["rid"]] = replay_entry(e, seed=seed, backend=backend)
     return out
 

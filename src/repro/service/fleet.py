@@ -10,10 +10,19 @@ surviving peer takes the dead shard's journal lock (the OS releases a
 flock only when the owner is truly gone — fencing for free), restores
 the journaled windows into a fresh ledger, raises the lease floor to
 the journaled high-water mark, and resumes the dead shard's tenant
-regions.  Because each shard serves its request subsequence in client
-order with ``max_batch=1``, the assignment of every request — and hence
-every byte — is identical to a run where the shard never died, which is
-exactly what the kill-mid-burst CI check asserts by digest equality.
+regions.
+
+Shards serve COALESCED (``max_batch > 1``) with standing producer
+pools, yet failover stays digest-identical, because batch composition
+is deterministic end to end: the client sends each shard's request
+subsequence in order on ONE pipelined connection (arrival order =
+send order), the shard's transport gate seals batches purely by count
+or an explicit ``flush`` op (never wall-clock, never connection EOF),
+and every sealed batch is journaled as ONE atomic record before its
+responses release.  A crashed shard's journal is therefore always
+batch-aligned; the adopter re-forms the identical batches from the
+client's in-order resubmission — which is exactly what the
+kill-mid-burst CI check asserts by digest equality.
 
 Pieces:
 
@@ -22,12 +31,17 @@ Pieces:
   * :class:`Fleet` — controller that spawns N ``ShardHost``
     subprocesses, hands out addresses, and can *fence* (SIGKILL + wait)
     a shard that is alive-but-hung so its journal lock drops,
-  * :class:`FleetClient` — router with per-request deadlines, bounded
-    exponential backoff, and fence-gated hedged resubmission: when the
-    owner of a shard stops answering, the client asks the failover peer
-    to adopt the shard's journal; the peer's flock attempt either
-    succeeds (owner dead -> hedge serves there) or reports ``locked``
-    (owner alive -> back off, optionally fence, retry),
+  * :class:`FleetClient` — PIPELINED router: per shard, a bounded
+    in-flight window of rid-tagged frames over the negotiated wire
+    version (binary v2 by default), out-of-order completion, in-order
+    per-tenant delivery, per-request deadlines, bounded exponential
+    backoff, and fence-gated hedged resubmission: when the owner of a
+    shard stops answering, the client asks the failover peer to adopt
+    the shard's journal; the peer's flock attempt either succeeds
+    (owner dead -> hedge serves there) or reports ``locked`` (owner
+    alive -> back off, optionally fence, retry); after failover every
+    unanswered request resubmits in original order (journaled rids
+    answer by replay, parked rids dedup server-side),
   * :func:`run_fleet_burst` — per-shard in-order burst driver (the
     deterministic traffic shape the digest checks rely on).
 
@@ -118,16 +132,31 @@ class HashRing:
 class FleetConfig:
     """Topology + client policy of one fleet run.
 
-    ``max_batch=1`` is deliberate: each shard serves its request
-    subsequence one at a time in arrival order, making every assignment
-    a pure function of (per-shard request order, ledger high-water) —
-    the property the kill-mid-burst digest-equality check depends on.
+    ``max_batch > 1`` is safe because batch composition is itself
+    deterministic: the client's per-shard pipeline sends in order, the
+    shard's gate seals purely by count (or the client's trailing
+    ``flush``), and each sealed microbatch journals as one atomic
+    record — so crash-replay and adoption re-form identical batches
+    and the kill-mid-burst digest-equality check still holds.
+
+    ``pipeline_depth`` bounds the client's in-flight window per shard
+    connection; it is clamped up to the server's negotiated
+    ``max_batch`` so a full batch can always be in flight (a smaller
+    window would deadlock: the gate waits for arrivals the client is
+    withholding).  ``binary=True`` negotiates wire v2 (raw
+    little-endian array payloads, zero-copy decode); v1 JSON remains
+    for compatibility.  ``hot_classes`` lists ``(sampler, dtype)``
+    pairs each shard keeps standing producer pools for.
     """
     num_shards: int = 2
     seed: int = 0
     journal_dir: str = "."
     host: str = "127.0.0.1"
-    max_batch: int = 1
+    max_batch: int = 32
+    pipeline_depth: int = 32
+    binary: bool = True
+    hot_classes: Tuple[Tuple[str, str], ...] = (
+        ("bits", "float32"), ("uniform", "float32"))
     queue_depth: int = 4096
     deadline_s: float = 120.0        # generous: first contacts pay jit
     connect_timeout_s: float = 10.0
@@ -172,7 +201,9 @@ class Fleet:
                    "--journal", self.journal_path(i),
                    "--port-file", self._port_file(i),
                    "--max-batch", str(config.max_batch),
-                   "--queue-depth", str(config.queue_depth)]
+                   "--queue-depth", str(config.queue_depth),
+                   "--hot-classes", ",".join(
+                       f"{s}:{d}" for s, d in config.hot_classes)]
             if self.fault_plan:
                 cmd += ["--fault-plan", self.fault_plan.to_json()]
             log = open(os.path.join(config.journal_dir,
@@ -260,46 +291,121 @@ class Fleet:
 # Client-side router
 # ---------------------------------------------------------------------------
 
-class _ShardConn:
-    """One persistent connection to whichever process owns a logical
-    shard.  Single-owner (the per-shard burst thread); reconnects on
-    demand."""
+class _MeterSock:
+    """Byte-metering socket wrapper: counts exactly what crosses the
+    wire so ``bytes_on_wire_per_req`` in the bench rows is measured,
+    not estimated."""
 
-    def __init__(self, host: str, port: int, *, connect_timeout: float):
-        self.addr = (host, port)
-        self.connect_timeout = connect_timeout
-        self._sock: Optional[socket.socket] = None
+    __slots__ = ("sock", "tx", "rx")
 
-    def call(self, msg: Dict[str, Any], *,
-             deadline_s: float) -> Dict[str, Any]:
-        if self._sock is None:
-            self._sock = socket.create_connection(
-                self.addr, timeout=self.connect_timeout)
-        self._sock.settimeout(deadline_s)
-        try:
-            transport.send_frame(self._sock, msg)
-            reply = transport.recv_frame(self._sock)
-        except (OSError, transport.TransportError):
-            self.close()
-            raise
-        if reply is None:
-            self.close()
-            raise transport.TornFrame(f"EOF from {self.addr}")
-        return reply
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.tx = 0
+        self.rx = 0
+
+    def sendall(self, data) -> None:
+        self.sock.sendall(data)
+        self.tx += len(data)
+
+    def recv(self, n: int) -> bytes:
+        data = self.sock.recv(n)
+        self.rx += len(data)
+        return data
+
+    def settimeout(self, t: Optional[float]) -> None:
+        self.sock.settimeout(t)
 
     def close(self) -> None:
-        if self._sock is not None:
+        self.sock.close()
+
+
+class _PipeConn:
+    """One persistent PIPELINED connection to whichever process owns a
+    logical shard.  Single-owner (the per-shard burst thread).
+
+    ``ensure()`` connects lazily and runs the hello negotiation once
+    per connection: the client offers its wire versions, the server
+    answers with the highest common one plus its ``max_batch`` (which
+    the caller folds into its in-flight window).  Byte counters
+    survive reconnects: ``disconnect()`` folds the dead socket's
+    totals into the conn before dropping it.
+    """
+
+    def __init__(self, addr: Tuple[str, int], *, connect_timeout: float,
+                 versions: Tuple[int, ...]):
+        self.addr = addr
+        self.connect_timeout = connect_timeout
+        self.versions = versions
+        self.sock: Optional[_MeterSock] = None
+        self.version = transport.WIRE_V1
+        self.server_max_batch = 1
+        self.tx = 0                  # folded totals from dead sockets
+        self.rx = 0
+
+    def ensure(self) -> None:
+        if self.sock is not None:
+            return
+        raw = socket.create_connection(self.addr,
+                                       timeout=self.connect_timeout)
+        self.sock = _MeterSock(raw)
+        transport.send_wire(
+            self.sock, {"op": "hello",
+                        "versions": sorted(self.versions)},
+            version=transport.WIRE_V1)
+        got = transport.recv_wire(self.sock)
+        if got is None:
+            raise transport.TornFrame(f"no hello reply from {self.addr}")
+        reply, _ = got
+        if not reply.get("ok"):
+            raise transport.WireError(
+                reply.get("kind", "error"),
+                str(reply.get("error", "hello refused")))
+        self.version = int(reply.get("version", transport.WIRE_V1))
+        self.server_max_batch = int(reply.get("max_batch", 1))
+
+    def send(self, obj: Dict[str, Any]) -> None:
+        self.ensure()
+        transport.send_wire(self.sock, obj, version=self.version)
+
+    def recv(self, timeout: float) -> Dict[str, Any]:
+        self.sock.settimeout(timeout)
+        got = transport.recv_wire(self.sock)
+        if got is None:
+            raise transport.TornFrame(f"EOF from {self.addr}")
+        return got[0]
+
+    def bytes_total(self) -> Tuple[int, int]:
+        live_tx = self.sock.tx if self.sock is not None else 0
+        live_rx = self.sock.rx if self.sock is not None else 0
+        return self.tx + live_tx, self.rx + live_rx
+
+    def disconnect(self) -> None:
+        if self.sock is not None:
+            self.tx += self.sock.tx
+            self.rx += self.sock.rx
             try:
-                self._sock.close()
+                self.sock.close()
             except OSError:
                 pass
-            self._sock = None
+            self.sock = None
+
+    def reset(self, addr: Tuple[str, int]) -> None:
+        self.disconnect()
+        self.addr = addr
 
 
 class FleetClient:
-    """Route requests to shard owners; retry, hedge, and fail over.
+    """Route requests to shard owners; pipeline, retry, hedge, fail
+    over.
 
-    The failure path for a request whose owner stopped answering:
+    Each logical shard gets ONE pipelined connection: a bounded
+    in-flight window of rid-tagged request frames, completions
+    accepted out of order, responses released strictly in the shard's
+    original request order (which is per-tenant order, since a tenant
+    maps to exactly one shard).  After the window's last request a
+    ``flush`` op seals any partial microbatch server-side.
+
+    The failure path for a shard whose owner stopped answering:
 
     1. bounded exponential backoff retries against the current owner
        (covers transient slowness and scripted ``slow`` faults —
@@ -310,7 +416,12 @@ class FleetClient:
        succeeds only if the owner is actually dead,
     3. if adoption keeps reporting ``locked`` (owner alive but hung)
        and a ``fencer`` is available, fence the owner (SIGKILL + wait)
-       and adopt — never two writers, never a lost response.
+       and adopt — never two writers, never a lost response,
+    4. after reconnecting, every still-unanswered request resubmits in
+       its original order: journaled rids answer by replay, parked
+       rids attach to the in-flight future, the rest re-enter the gate
+       — so batch composition (and hence every byte) matches a
+       fault-free run.
     """
 
     def __init__(self, addresses: Dict[int, Tuple[str, int]],
@@ -319,7 +430,8 @@ class FleetClient:
                  fencer: Optional[Callable[[int], None]] = None,
                  ring: Optional[HashRing] = None,
                  deadline_s: Optional[float] = None,
-                 fence_after: int = 2):
+                 fence_after: int = 2,
+                 binary: Optional[bool] = None):
         self.config = config or FleetConfig(num_shards=len(addresses))
         self.addresses = dict(addresses)
         self.journals = dict(journals)
@@ -327,32 +439,40 @@ class FleetClient:
         self.fence_after = fence_after
         self.deadline_s = (self.config.deadline_s
                            if deadline_s is None else deadline_s)
+        self.binary = self.config.binary if binary is None else binary
+        self._versions: Tuple[int, ...] = (
+            (transport.WIRE_V1, transport.WIRE_V2) if self.binary
+            else (transport.WIRE_V1,))
         self.ring = ring or HashRing(len(addresses),
                                      replicas=self.config.replicas)
         # logical shard -> process index currently hosting it
         self._owner: Dict[int, int] = {i: i for i in addresses}
-        self._conns: Dict[int, _ShardConn] = {}
+        self._conns: Dict[int, _PipeConn] = {}
         self._lock = threading.Lock()
         self.latencies: List[float] = []
         self.retries = 0
         self.failovers = 0
         self.errors = 0
         self.recovery_s: Optional[float] = None
+        # (tenant_id, rid) in delivery order — the per-tenant ordering
+        # oracle the pipelining tests assert over
+        self.delivery_log: List[Tuple[str, str]] = []
+        self._bytes_base = (0, 0)    # byte totals at last reset_metrics
 
     # -- connection/ownership ---------------------------------------------
 
-    def _conn(self, logical: int) -> _ShardConn:
+    def _conn(self, logical: int) -> _PipeConn:
         with self._lock:
             proc = self._owner[logical]
             conn = self._conns.get(logical)
-            host, port = self.addresses[proc]
-            if conn is None or conn.addr != (host, port):
-                if conn is not None:
-                    conn.close()
-                conn = _ShardConn(
-                    host, port,
-                    connect_timeout=self.config.connect_timeout_s)
+            addr = self.addresses[proc]
+            if conn is None:
+                conn = _PipeConn(
+                    addr, connect_timeout=self.config.connect_timeout_s,
+                    versions=self._versions)
                 self._conns[logical] = conn
+            elif conn.addr != addr:
+                conn.reset(addr)
             return conn
 
     def _try_adopt(self, logical: int) -> bool:
@@ -375,9 +495,9 @@ class FleetClient:
             if reply.get("ok"):
                 with self._lock:
                     self._owner[logical] = peer_proc
-                    conn = self._conns.pop(logical, None)
+                    conn = self._conns.get(logical)
                 if conn is not None:
-                    conn.close()
+                    conn.reset(self.addresses[peer_proc])
                 self.failovers += 1
                 return True
             if reply.get("kind") != "locked":
@@ -386,25 +506,95 @@ class FleetClient:
 
     # -- request path ------------------------------------------------------
 
-    def request(self, req: RandRequest) -> np.ndarray:
-        """Serve one request, riding out owner death: deadline, bounded
-        backoff, fence-gated hedged resubmission."""
-        if req.rid is None:
-            raise ValueError("fleet requests need caller-stamped rids")
-        logical = self.ring.owner(req.tenant_id)
-        msg = transport.request_to_wire(req, logical)
-        t0 = time.perf_counter()
+    def run_shard(self, logical: int, reqs: List[RandRequest],
+                  responses: Optional[Dict[str, np.ndarray]] = None
+                  ) -> Dict[str, np.ndarray]:
+        """Serve ``reqs`` (one shard's in-order subsequence) through a
+        bounded pipelined window, riding out owner death.
+
+        Completions arrive rid-tagged and possibly out of order;
+        delivery into ``responses`` (and ``delivery_log``) is strictly
+        in ``reqs`` order.  On a wire failure every unanswered request
+        resubmits in original order after the adopt/fence dance — the
+        server dedups by rid, so composition is preserved.
+        """
+        if responses is None:
+            responses = {}
+        for r in reqs:
+            if r.rid is None:
+                raise ValueError("fleet requests need caller-stamped rids")
+        resolved: Dict[str, np.ndarray] = {}
+        t_first: Dict[str, float] = {}
+        delivered = 0
+
+        def release() -> None:
+            nonlocal delivered
+            while (delivered < len(reqs)
+                   and reqs[delivered].rid in resolved):
+                req = reqs[delivered]
+                responses[req.rid] = resolved[req.rid]
+                with self._lock:
+                    self.latencies.append(
+                        time.perf_counter() - t_first[req.rid])
+                    self.delivery_log.append((req.tenant_id, req.rid))
+                delivered += 1
+
+        attempt = 0
         failed_at: Optional[float] = None
         last_exc: Optional[BaseException] = None
-        for attempt in range(self.config.max_retries + 1):
+        while delivered < len(reqs):
+            conn = self._conn(logical)
             try:
-                reply = self._conn(logical).call(
-                    msg, deadline_s=self.deadline_s)
-            except (OSError, transport.TransportError) as e:
+                conn.ensure()
+                window = max(self.config.pipeline_depth,
+                             conn.server_max_batch)
+                todo = [r for r in reqs if r.rid not in resolved]
+                inflight: set = set()
+                sent = 0
+                flushed = False
+                while inflight or sent < len(todo) or not flushed:
+                    while sent < len(todo) and len(inflight) < window:
+                        r = todo[sent]
+                        t_first.setdefault(r.rid, time.perf_counter())
+                        conn.send(transport.request_to_wire(r, logical))
+                        inflight.add(r.rid)
+                        sent += 1
+                    if sent >= len(todo) and not flushed:
+                        # seal any partial microbatch server-side
+                        conn.send({"op": "flush", "shard": logical})
+                        flushed = True
+                    if not inflight and flushed:
+                        break
+                    reply = conn.recv(self.deadline_s)
+                    rid = reply.get("rid")
+                    if rid is None:
+                        continue            # op ack (flush)
+                    if reply.get("ok"):
+                        if (failed_at is not None
+                                and self.recovery_s is None):
+                            self.recovery_s = (time.perf_counter()
+                                               - failed_at)
+                        inflight.discard(rid)
+                        resolved[rid] = transport.reply_array(reply)
+                        release()
+                        continue
+                    if reply.get("kind") == "not_owner":
+                        # ownership moved (another thread's failover
+                        # won): rediscover, then resubmit unanswered
+                        raise transport.WireError(
+                            "not_owner", str(reply.get("error", "")))
+                    self.errors += 1
+                    raise FleetError(
+                        f"shard {logical} refused {rid}: "
+                        f"{reply.get('kind')}: {reply.get('error')}")
+                continue                    # loop guard re-checks
+            except (OSError, transport.TransportError,
+                    transport.WireError) as e:
                 last_exc = e
                 if failed_at is None:
                     failed_at = time.perf_counter()
                 self.retries += 1
+                conn.disconnect()
                 adopted = self._try_adopt(logical)
                 if not adopted:
                     if (self.fencer is not None
@@ -417,33 +607,46 @@ class FleetClient:
                     time.sleep(min(self.config.backoff_cap_s,
                                    self.config.backoff_base_s
                                    * (2 ** attempt)))
-                continue
-            if reply.get("ok"):
-                if failed_at is not None and self.recovery_s is None:
-                    self.recovery_s = time.perf_counter() - failed_at
-                self.latencies.append(time.perf_counter() - t0)
-                return transport.decode_array(reply["array"])
-            if reply.get("kind") == "not_owner":
-                # ownership moved (e.g. another thread's failover won):
-                # re-adopt / rediscover, then retry
-                last_exc = transport.WireError("not_owner",
-                                               reply.get("error", ""))
-                self.retries += 1
-                self._try_adopt(logical)
-                continue
-            self.errors += 1
-            raise FleetError(
-                f"shard {logical} refused {req.rid}: "
-                f"{reply.get('kind')}: {reply.get('error')}")
-        self.errors += 1
-        raise FleetError(
-            f"request {req.rid} exhausted {self.config.max_retries} "
-            f"retries against shard {logical}") from last_exc
+                attempt += 1
+                if attempt > self.config.max_retries:
+                    self.errors += 1
+                    raise FleetError(
+                        f"shard {logical} burst exhausted "
+                        f"{self.config.max_retries} retries "
+                        f"({len(reqs) - delivered} undelivered)"
+                        ) from last_exc
+        return responses
+
+    def request(self, req: RandRequest) -> np.ndarray:
+        """Serve one request (a single-element pipelined window; the
+        trailing ``flush`` seals the server's partial batch)."""
+        if req.rid is None:
+            raise ValueError("fleet requests need caller-stamped rids")
+        out = self.run_shard(self.ring.owner(req.tenant_id), [req])
+        return out[req.rid]
+
+    def reset_metrics(self) -> None:
+        """Zero latency/retry/byte accounting (connections stay up) so
+        a benchmark can split warm-up from a steady-state window."""
+        with self._lock:
+            self.latencies = []
+            self.delivery_log = []
+            self.retries = self.failovers = self.errors = 0
+            self.recovery_s = None
+            self._bytes_base = (
+                sum(c.bytes_total()[0] for c in self._conns.values()),
+                sum(c.bytes_total()[1] for c in self._conns.values()))
 
     def stats(self) -> Dict[str, Any]:
         lat = np.asarray(self.latencies, np.float64)
+        with self._lock:
+            tx = (sum(c.bytes_total()[0] for c in self._conns.values())
+                  - self._bytes_base[0])
+            rx = (sum(c.bytes_total()[1] for c in self._conns.values())
+                  - self._bytes_base[1])
+        n = int(lat.size)
         return {
-            "requests": int(lat.size),
+            "requests": n,
             "retries": self.retries,
             "failovers": self.failovers,
             "errors": self.errors,
@@ -453,22 +656,27 @@ class FleetClient:
                                if lat.size else 0.0),
             "latency_p99_ms": (float(np.percentile(lat, 99)) * 1e3
                                if lat.size else 0.0),
+            "bytes_tx": tx,
+            "bytes_rx": rx,
+            "bytes_on_wire_per_req": ((tx + rx) / n if n else 0.0),
         }
 
     def close(self) -> None:
         with self._lock:
-            conns, self._conns = list(self._conns.values()), {}
+            conns = list(self._conns.values())
         for conn in conns:
-            conn.close()
+            conn.disconnect()
 
 
 def run_fleet_burst(client: FleetClient,
                     requests: List[RandRequest]
                     ) -> Dict[str, np.ndarray]:
     """Drive a burst through the fleet: requests partition by owning
-    shard (order preserved) and each partition is served strictly
-    in-order on its own thread — so every shard sees a deterministic
-    subsequence and assignments are reproducible, fault or no fault.
+    shard (order preserved) and each partition runs through the
+    pipelined per-shard engine on its own thread — every shard sees a
+    deterministic in-order subsequence (bounded in-flight window,
+    in-order delivery), so assignments are reproducible, fault or no
+    fault.
     """
     by_shard: Dict[int, List[RandRequest]] = {}
     for req in requests:
@@ -478,19 +686,19 @@ def run_fleet_burst(client: FleetClient,
     failures: List[BaseException] = []
     lock = threading.Lock()
 
-    def worker(reqs: List[RandRequest]) -> None:
-        for req in reqs:
-            try:
-                a = client.request(req)
-            except BaseException as e:   # noqa: BLE001 — surfaced below
-                with lock:
-                    failures.append(e)
-                return
+    def worker(shard: int, reqs: List[RandRequest]) -> None:
+        try:
+            out = client.run_shard(shard, reqs)
+        except BaseException as e:   # noqa: BLE001 — surfaced below
             with lock:
-                responses[req.rid] = a
+                failures.append(e)
+            return
+        with lock:
+            responses.update(out)
 
-    threads = [threading.Thread(target=worker, args=(reqs,), daemon=True)
-               for reqs in by_shard.values()]
+    threads = [threading.Thread(target=worker, args=(shard, reqs),
+                                daemon=True)
+               for shard, reqs in by_shard.items()]
     for t in threads:
         t.start()
     for t in threads:
@@ -508,8 +716,10 @@ def serve_shard(args) -> int:
     injector = None
     if args.fault_plan:
         injector = FaultInjector(FaultPlan.parse(args.fault_plan))
+    hot = tuple(tuple(p.split(":", 1))
+                for p in args.hot_classes.split(",") if p)
     cfg = ServerConfig(max_batch=args.max_batch, max_delay_s=0.0,
-                       queue_depth=args.queue_depth)
+                       queue_depth=args.queue_depth, hot_classes=hot)
     host = transport.ShardHost(args.seed, host=args.host, port=args.port,
                                config=cfg, injector=injector)
     host.add_shard(args.shard, args.journal)
@@ -534,8 +744,10 @@ def main(argv=None) -> int:
     ap.add_argument("--port", type=int, default=0)
     ap.add_argument("--journal", required=True)
     ap.add_argument("--port-file", required=True)
-    ap.add_argument("--max-batch", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--queue-depth", type=int, default=4096)
+    ap.add_argument("--hot-classes", default="",
+                    help="comma-joined sampler:dtype pool classes")
     ap.add_argument("--fault-plan", default="")
     args = ap.parse_args(argv)
     if not args.serve:

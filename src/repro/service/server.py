@@ -18,9 +18,15 @@ reaches ``max_batch`` requests OR when the oldest request has waited
 
 Every response's assignment is journaled and fsynced *before* the
 caller's future resolves, so a crash after a response was released is
-always replayable (``repro.service.audit``).  On construction with a
-non-empty journal the server fences every journaled window off its
-ledgers — a restarted service can never re-serve consumed randomness.
+always replayable (``repro.service.audit``).  Journaling is
+**group-committed**: each microbatch becomes ONE atomic ``batch``
+record (its composition in batch order + every counter window it
+consumed) and ONE fsync, instead of a write+fsync per request.  On
+construction with a non-empty journal the server fences every
+journaled window off its ledgers — a restarted service can never
+re-serve consumed randomness — and standing pools resume mid-block at
+the exact column cursor the journal implies, so a failover peer's
+pool serves the same columns the dead owner would have.
 
 Shutdown is a graceful drain: ``shutdown()`` stops new admissions,
 serves everything already queued, closes the pools (releasing their
@@ -45,6 +51,20 @@ from repro.service.frontend import (DEFAULT_MAX_ROWS, Assignment, Coalescer,
                                     RandRequest, slice_response)
 
 _STOP = object()
+
+
+class _SealedBatch:
+    """A pre-composed microbatch enqueued as ONE queue item.
+
+    ``submit_batch`` wraps its requests in this so the dispatch loop
+    serves them exactly as composed — never merged with neighbouring
+    arrivals, never re-chunked — which is what lets a wire shard seal
+    batch composition at the transport gate and journal it atomically.
+    """
+    __slots__ = ("items",)
+
+    def __init__(self, items: List) -> None:
+        self.items = items
 
 
 class ServiceClosed(RuntimeError):
@@ -90,6 +110,7 @@ class _Pool:
         self.sampler, self.out_dtype = sampler, out_dtype
         self.channel = pool_channel(sampler, out_dtype)
         self.rows, self.cols = rows, cols
+        self._service = service
         # donation is an optimisation, never a requirement: fall back to
         # plain allocation where the runtime can't alias
         self.donate = donate and blocks.donation_supported()
@@ -134,6 +155,25 @@ class _Pool:
         self.requests_served += 1
         return resp, asg, fresh
 
+    def resume(self, lo: int, consumed: int) -> None:
+        """Re-enter the middle of the journaled block ``[lo, lo+rows)``
+        with ``consumed`` columns already served.
+
+        The window is already durable (journaled + fenced), so the
+        block is REGENERATED — bit-identical by counter addressing —
+        without leasing; the column cursor continues exactly where the
+        previous owner's journal left off.  A restarted/adopting server
+        therefore serves the same columns for the same arrivals the
+        dead owner would have — the pool half of deterministic
+        failover.
+        """
+        blk = self._service.regenerate(self.channel, lo, self.rows)
+        self._block = np.asarray(blk)
+        self._lease = blocks.Lease(channel=self.channel, lo=int(lo),
+                                   hi=int(lo) + self.rows,
+                                   service=self._service)
+        self._col = int(consumed)
+
     def close(self) -> None:
         self._producer.close()
 
@@ -162,14 +202,24 @@ class RandServer:
         self.journal = journal
         self.block_service = blocks.BlockService(seed, backend=backend)
         if journal is not None and journal.entries:
-            journal.restore_into(self.block_service)   # restart: fence
+            # restart/adopt: restore committed windows AND raise each
+            # channel's lease floor to its journaled high-water mark —
+            # this MUST happen before the pools below spin up their
+            # producers (restore_ledger wipes reservations, so a later
+            # restore would strand every producer's leased-ahead block)
+            journal.restore_into(self.block_service, fence=True)
         # explicit None-check: a freshly constructed registry is empty,
         # hence falsy (__len__) — `registry or ...` would discard it
         self.registry = (registry if registry is not None else
                          tenants_mod.TenantRegistry(
                              default_quota=self.config.default_quota))
+        # the coalescer runs journal-less under the server: the server
+        # group-commits ONE atomic `batch` record per microbatch (see
+        # _serve_batch) instead of per-request/per-window records, so
+        # windows are derived from the returned assignments.  Direct
+        # Coalescer users (quality battery) keep per-record journaling.
         self.coalescer = Coalescer(
-            self.block_service, self.registry, journal=journal,
+            self.block_service, self.registry, journal=None,
             backend=backend, deco=deco, max_rows=self.config.max_rows)
         self._pools: Dict[Tuple[str, str], _Pool] = {}
         for sampler, out_dtype in self.config.hot_classes:
@@ -179,6 +229,8 @@ class RandServer:
                 depth=self.config.pool_depth,
                 donate=self.config.pool_donate,
                 fuse=self.config.pool_fuse)
+        if journal is not None and journal.entries:
+            self._resume_pools(journal)
         self._queue: "queue.Queue" = queue.Queue(
             maxsize=self.config.queue_depth)
         self._closed = threading.Event()
@@ -206,6 +258,35 @@ class RandServer:
         self.started = False
         if start:
             self.start()
+
+    def _resume_pools(self, journal: Journal) -> None:
+        """Continue each standing pool mid-block from the journal.
+
+        The journal's last request against a pool channel names the
+        block window (``lo``) and, via its highest tag, the column
+        cursor; regenerating that window (no lease — it is already
+        committed and fenced) and setting the cursor makes the resumed
+        pool's future serves identical to the dead owner's.
+        """
+        entries = journal.requests()
+        for pool in self._pools.values():
+            last_lo: Optional[int] = None
+            last_rows = 0
+            consumed = 0
+            for e in entries:
+                if e["channel"] != pool.channel:
+                    continue
+                if e["lo"] != last_lo:
+                    last_lo, consumed = e["lo"], 0
+                    last_rows = int(e["rows"])
+                if e["tags"]:
+                    consumed = max(consumed, max(e["tags"]) + 1)
+            # a changed pool geometry (rows) or an exhausted block means
+            # there is nothing to re-enter; fresh leases start past the
+            # fence either way
+            if (last_lo is not None and last_rows == pool.rows
+                    and consumed < pool.cols):
+                pool.resume(last_lo, consumed)
 
     def start(self) -> None:
         """Start the dispatch loop (idempotent).  ``start=False`` at
@@ -266,6 +347,54 @@ class RandServer:
                                  f"for {timeout}s")
             time.sleep(0.002)
 
+    def submit_batch(self, requests: List[RandRequest],
+                     timeout: Optional[float] = None) -> List:
+        """Enqueue a SEALED microbatch; returns one Future per request.
+
+        The batch is served exactly as composed — one queue item, one
+        ``_serve_batch`` call, one atomic journal record — never merged
+        with other arrivals or re-chunked by the watermark.  This is the
+        wire shard's path: the transport gate seals composition (by
+        count or explicit flush), and determinism of the journal record
+        then makes failover reconstruct identical batches.
+        """
+        import concurrent.futures
+        reqs: List[RandRequest] = []
+        for request in requests:
+            request.validate()
+            if request.rid is None:
+                request = dataclasses.replace(request, rid=self._next_rid())
+            reqs.append(request)
+        if self.journal is not None:
+            # all-or-nothing admission against the session rid set: a
+            # rejected batch must not leak partial registrations
+            with self._rid_lock:
+                for r in reqs:
+                    if r.rid in self._session_rids:
+                        raise ValueError(
+                            f"rid {r.rid!r} was already used in this "
+                            f"journal; rids must be unique")
+                for r in reqs:
+                    self._session_rids.add(r.rid)
+        t0 = time.perf_counter()
+        futs = [concurrent.futures.Future() for _ in reqs]
+        sealed = _SealedBatch(
+            [(r, f, t0) for r, f in zip(reqs, futs)])
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._close_lock:
+                if self._closed.is_set():
+                    raise ServiceClosed("RandServer is shut down")
+                try:
+                    self._queue.put_nowait(sealed)
+                    return futs
+                except queue.Full:
+                    pass
+            if deadline is not None and time.monotonic() >= deadline:
+                raise queue.Full("RandServer queue stayed full "
+                                 f"for {timeout}s")
+            time.sleep(0.002)
+
     def request(self, tenant_id: str, shape, sampler: str = "bits",
                 out_dtype: str = "float32",
                 timeout: Optional[float] = None) -> np.ndarray:
@@ -286,7 +415,12 @@ class RandServer:
                 continue
             if item is _STOP:
                 break
+            if isinstance(item, _SealedBatch):
+                # sealed composition: serve verbatim, never merge
+                self._serve_batch(item.items)
+                continue
             batch = [item]
+            pending: Optional[_SealedBatch] = None
             deadline = time.perf_counter() + cfg.max_delay_s
             while len(batch) < cfg.max_batch:
                 left = deadline - time.perf_counter()
@@ -299,16 +433,24 @@ class RandServer:
                 if nxt is _STOP:
                     stop = True
                     break
+                if isinstance(nxt, _SealedBatch):
+                    pending = nxt
+                    break
                 batch.append(nxt)
             self._serve_batch(batch)
+            if pending is not None:
+                self._serve_batch(pending.items)
         # stragglers racing the shutdown sentinel: fail, don't hang
         while True:
             try:
                 item = self._queue.get_nowait()
             except queue.Empty:
                 break
-            if item is not _STOP:
-                item[1].set_exception(
+            if item is _STOP:
+                continue
+            items = item.items if isinstance(item, _SealedBatch) else [item]
+            for it in items:
+                it[1].set_exception(
                     ServiceClosed("RandServer is shut down"))
         for pool in self._pools.values():
             pool.close()
@@ -324,6 +466,8 @@ class RandServer:
         coalesce: List[RandRequest] = []
         futs: Dict[str, Tuple] = {}
         seen_rids = set()
+        served: List = []          # Assignments, batch order
+        windows: List[Tuple[str, int, int]] = []
         for req, fut, t0 in batch:
             if req.rid in seen_rids:
                 ready.append((fut, ValueError(
@@ -339,11 +483,10 @@ class RandServer:
                     continue
                 try:
                     resp, asg, fresh = pool.serve(req)
-                    if self.journal is not None:
-                        if fresh:
-                            self.journal.append_window(
-                                asg.channel, asg.lo, asg.lo + asg.rows)
-                        self.journal.append_request(asg)
+                    if fresh:
+                        windows.append(
+                            (asg.channel, asg.lo, asg.lo + asg.rows))
+                    served.append(asg)
                     ready.append((fut, resp, False, t0))
                 except Exception as e:
                     # admission was charged but nothing served: refund
@@ -354,9 +497,19 @@ class RandServer:
                 futs[req.rid] = (fut, t0)
         if coalesce:
             try:
-                responses, _, errors = self.coalescer.flush(coalesce)
+                responses, asgs, errors = self.coalescer.flush(coalesce)
             except Exception as e:      # whole-batch failure
-                responses, errors = {}, {r.rid: e for r in coalesce}
+                responses, asgs, errors = {}, [], \
+                    {r.rid: e for r in coalesce}
+            # the journal-less coalescer no longer records its windows;
+            # they are fully determined by the assignments (each class
+            # batch shares one [lo, lo+rows) lease)
+            seen_w = set()
+            for a in asgs:
+                if (a.channel, a.lo) not in seen_w:
+                    seen_w.add((a.channel, a.lo))
+                    windows.append((a.channel, a.lo, a.lo + a.rows))
+            served.extend(asgs)
             for rid, (fut, t0) in futs.items():
                 if rid in responses:
                     ready.append((fut, responses[rid], False, t0))
@@ -364,8 +517,11 @@ class RandServer:
                     err = errors.get(
                         rid, RuntimeError(f"request {rid} not served"))
                     ready.append((fut, err, True, t0))
-        # durability before release: flush the journal, THEN resolve
+        # group commit, then durability before release: ONE atomic
+        # batch record (composition + windows), ONE fsync, THEN resolve
         if self.journal is not None:
+            if served:
+                self.journal.append_batch(served, windows)
             self.journal.flush()
         t_done = time.perf_counter()
         self._t_last = t_done
@@ -446,6 +602,7 @@ class RandServer:
             "requests_served": self._served,
             "requests_failed": self._failed,
             "pool_requests": pool_served,
+            "pool_hit_rate": pool_served / total,
             "requests_per_s": (self._served / span) if span > 0 else 0.0,
             "latency_p50_ms": (float(np.percentile(lat, 50)) * 1e3
                                if lat.size else 0.0),

@@ -1,14 +1,32 @@
-"""Wire transport for the RandService fleet: framed JSON over TCP.
+"""Wire transport for the RandService fleet: two frame formats, one TCP.
 
-A frame is a 4-byte big-endian length ``N`` followed by ``N`` bytes of
-UTF-8 JSON.  Arrays travel as ``{"dtype", "shape", "data": base64}`` —
-dtype by name (including ``bfloat16`` via ml_dtypes), bytes verbatim, so
-``response_digest`` over wire-decoded responses equals the digest over
-the server's own arrays.  Robustness rules of the framing layer:
+Two wire versions coexist on every connection, disambiguated by the
+first byte of each frame:
+
+  * **v1 (JSON)** — a 4-byte big-endian length ``N`` followed by ``N``
+    bytes of UTF-8 JSON.  Arrays travel as ``{"dtype", "shape",
+    "data": base64}`` — dtype by name (including ``bfloat16`` via
+    ml_dtypes), bytes verbatim.  Because the length prefix is capped at
+    16 MiB, a v1 frame's first byte is always ``0x00`` or ``0x01``.
+  * **v2 (binary)** — ``0xB7`` magic + version byte + two u32
+    little-endian lengths (header, payload) + a compact JSON header +
+    the raw array payload.  Array values leave the message dict and
+    travel as raw little-endian bytes after the header, described by a
+    ``"_bin"`` table of ``{dtype, shape, off, nbytes}`` — no base64
+    inflation, no ``json.dumps`` over megabyte payloads — and decode
+    ZERO-COPY: ``np.frombuffer`` views over the received buffer (the
+    views are read-only; copy before mutating).
+
+Either way ``response_digest`` over wire-decoded responses equals the
+digest over the server's own arrays.  Versions are negotiated per
+connection with a ``hello`` op (the server replies to every frame in
+the version the frame arrived in, so v1-only peers keep working
+unannounced).  Robustness rules of the framing layer:
 
   * a frame whose declared length exceeds ``max_frame`` is refused with
     an error frame and the connection is closed (the stream cannot be
-    resynchronized after an untrusted length),
+    resynchronized after an untrusted length) — v2 header/payload
+    lengths included,
   * a peer that disconnects mid-frame raises :class:`TornFrame` on the
     reader's side; the server closes that connection and keeps
     accepting — one client's torn write can never wedge the accept
@@ -19,8 +37,17 @@ the server's own arrays.  Robustness rules of the framing layer:
     construction.
 
 :class:`ShardHost` is one fleet process: a TCP accept loop over a set
-of *logical shards*, each an independent ``RandServer`` + journal.  A
-host usually starts owning exactly one shard; after a peer dies it
+of *logical shards*, each an independent ``RandServer`` + journal.
+Requests are served PIPELINED: the connection reader admits each
+request to its shard's :class:`_Gate` (an arrival-order microbatch
+gate) and keeps reading; replies are rid-tagged and sent as their
+futures resolve, possibly out of order.  A gate seals a batch only by
+COUNT (``max_batch``) or an explicit client ``flush`` op — never by
+wall-clock and never on connection EOF — which makes batch composition
+a pure function of per-shard arrival order and is what keeps failover
+digest-identical with coalescing enabled (see ``_Gate``).
+
+A host usually starts owning exactly one shard; after a peer dies it
 *adopts* the dead shard — takes the journal's exclusive flock (the
 fencing step: the OS grants it only once the owner is truly gone),
 fences the journaled windows off a fresh ledger, and resumes that
@@ -38,7 +65,7 @@ import struct
 import sys
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -48,6 +75,15 @@ from repro.service.frontend import RandRequest
 from repro.service.server import RandServer, ServerConfig
 
 _HEADER = struct.Struct("!I")
+
+#: v2 binary framing: magic + version byte, then LE (header, payload)
+#: lengths.  The magic can never open a v1 frame — a v1 length prefix
+#: under the 16 MiB cap starts 0x00/0x01, never 0xB7.
+WIRE_MAGIC = 0xB7
+WIRE_V1 = 1
+WIRE_V2 = 2
+SUPPORTED_VERSIONS = (WIRE_V1, WIRE_V2)
+_V2_HEAD = struct.Struct("<II")
 
 #: default cap on one frame's JSON payload (requests and responses are
 #: far smaller; the cap exists so a hostile length prefix cannot make
@@ -124,6 +160,121 @@ def recv_frame(sock: socket.socket, *,
     return json.loads(body.decode("utf-8"))
 
 
+def send_wire(sock: socket.socket, obj: Dict[str, Any], *,
+              version: int = WIRE_V1,
+              max_frame: int = MAX_FRAME) -> int:
+    """Send one frame in ``version``; returns bytes put on the wire.
+
+    ``obj`` may carry live ``np.ndarray`` values at the top level: v1
+    encodes them via :func:`encode_array` (base64 JSON); v2 ships them
+    as raw little-endian bytes after the compact header, described by
+    the ``"_bin"`` table.
+    """
+    if version == WIRE_V1:
+        enc = {k: (encode_array(v) if isinstance(v, np.ndarray) else v)
+               for k, v in obj.items()}
+        data = json.dumps(enc, sort_keys=True).encode("utf-8")
+        if len(data) > max_frame:
+            raise FrameTooLarge(
+                f"frame of {len(data)} bytes exceeds cap {max_frame}")
+        sock.sendall(_HEADER.pack(len(data)) + data)
+        return _HEADER.size + len(data)
+    if version != WIRE_V2:
+        raise TransportError(f"unknown wire version {version}")
+    head: Dict[str, Any] = {}
+    bins: Dict[str, Dict[str, Any]] = {}
+    chunks: List[bytes] = []
+    off = 0
+    for k, v in obj.items():
+        if isinstance(v, np.ndarray):
+            raw = np.ascontiguousarray(v).tobytes()
+            bins[k] = {"dtype": str(v.dtype), "shape": list(v.shape),
+                       "off": off, "nbytes": len(raw)}
+            chunks.append(raw)
+            off += len(raw)
+        else:
+            head[k] = v
+    if bins:
+        head["_bin"] = bins
+    hdata = json.dumps(head, sort_keys=True).encode("utf-8")
+    total = 2 + _V2_HEAD.size + len(hdata) + off
+    if total > max_frame:
+        raise FrameTooLarge(
+            f"frame of {total} bytes exceeds cap {max_frame}")
+    sock.sendall(bytes((WIRE_MAGIC, WIRE_V2))
+                 + _V2_HEAD.pack(len(hdata), off) + hdata)
+    for raw in chunks:
+        sock.sendall(raw)
+    return total
+
+
+def recv_wire(sock: socket.socket, *, max_frame: int = MAX_FRAME
+              ) -> Optional[Tuple[Dict[str, Any], int]]:
+    """Read one frame of EITHER version; ``(msg, version)``, or ``None``
+    on clean EOF at a frame boundary.
+
+    The version is sniffed from the first byte (``WIRE_MAGIC`` opens a
+    v2 frame; anything else is a v1 length prefix).  v2 array payloads
+    decode zero-copy — each ``"_bin"`` entry becomes a read-only
+    ``np.frombuffer`` view over the received payload buffer, placed
+    back into the message under its key.  Torn/oversize containment
+    matches :func:`recv_frame` exactly.
+    """
+    first = _recv_exact(sock, 1)
+    if first is None:
+        return None
+    if first[0] != WIRE_MAGIC:
+        rest = _recv_exact(sock, _HEADER.size - 1)
+        if rest is None:
+            raise TornFrame("peer closed inside a v1 frame header")
+        (length,) = _HEADER.unpack(first + rest)
+        if length > max_frame:
+            raise FrameTooLarge(
+                f"declared frame length {length} exceeds cap {max_frame}")
+        body = _recv_exact(sock, length)
+        if body is None:
+            raise TornFrame(f"peer closed before {length}-byte body")
+        return json.loads(body.decode("utf-8")), WIRE_V1
+    rest = _recv_exact(sock, 1 + _V2_HEAD.size)
+    if rest is None:
+        raise TornFrame("peer closed inside a v2 frame header")
+    version = rest[0]
+    if version != WIRE_V2:
+        raise TransportError(f"unsupported wire version {version}")
+    hlen, plen = _V2_HEAD.unpack(rest[1:])
+    if 2 + _V2_HEAD.size + hlen + plen > max_frame:
+        raise FrameTooLarge(
+            f"declared v2 frame of {hlen}+{plen} bytes exceeds cap "
+            f"{max_frame}")
+    hdata = _recv_exact(sock, hlen)
+    if hdata is None:
+        raise TornFrame("peer closed before the v2 header")
+    msg = json.loads(hdata.decode("utf-8"))
+    payload = b""
+    if plen:
+        payload = _recv_exact(sock, plen)
+        if payload is None:
+            raise TornFrame(f"peer closed before {plen}-byte payload")
+    bins = msg.pop("_bin", None)
+    if bins:
+        for k, d in bins.items():
+            dt = _resolve_dtype(d["dtype"])
+            msg[k] = np.frombuffer(
+                payload, dtype=dt, count=d["nbytes"] // dt.itemsize,
+                offset=d["off"]).reshape(tuple(d["shape"]))
+    return msg, version
+
+
+def reply_array(reply: Dict[str, Any]) -> np.ndarray:
+    """The array of a reply read by :func:`recv_wire`, either version:
+    a v2 reply already holds the zero-copy ndarray; a v1 reply holds
+    the base64 encoding."""
+    a = reply["array"]
+    if isinstance(a, np.ndarray):
+        return a
+    return decode_array(a)
+
+
 # ---------------------------------------------------------------------------
 # Array + request encoding
 # ---------------------------------------------------------------------------
@@ -172,6 +323,88 @@ class _DropReply(Exception):
     replying (the request WAS served and journaled)."""
 
 
+class _Gate:
+    """Per-shard arrival-order microbatch gate + in-flight rid registry.
+
+    The determinism contract of pooled/coalesced fleet serving: a batch
+    seals when it reaches ``max_batch`` requests or when an explicit
+    client ``flush`` op arrives — NEVER on wall-clock and NEVER on
+    connection EOF.  A dying client connection therefore cannot change
+    batch composition: its parked requests stay parked; the client
+    reconnects and resubmits unanswered rids in their original order;
+    and the registry attaches those duplicate arrivals to the
+    already-parked entry (or the in-flight future) instead of
+    re-admitting them.  The gate's arrival sequence — and hence every
+    journaled ``batch`` record — is identical to the no-fault run's,
+    which is what the kill-mid-burst digest equality rests on.
+    """
+
+    def __init__(self, srv: RandServer, max_batch: int):
+        self.srv = srv
+        self.max_batch = max(1, int(max_batch))
+        self._lock = threading.Lock()
+        # arrival order; each entry carries every waiter for its rid
+        self._pending: List[Tuple[RandRequest, List[Callable]]] = []
+        self._pending_rids: Dict[str, List[Callable]] = {}
+        self._inflight: Dict[str, Any] = {}       # rid -> Future
+
+    def admit(self, req: RandRequest, deliver: Callable) -> None:
+        """Park ``req``; ``deliver(future)`` fires when it resolves.
+
+        A rid already in flight (or parked) gains a second waiter
+        instead of a second slot — resubmissions after a connection
+        death cannot perturb composition.
+        """
+        with self._lock:
+            fut = self._inflight.get(req.rid)
+            if fut is not None:
+                fut.add_done_callback(deliver)
+                return
+            waiters = self._pending_rids.get(req.rid)
+            if waiters is not None:
+                waiters.append(deliver)
+                return
+            waiters = [deliver]
+            self._pending.append((req, waiters))
+            self._pending_rids[req.rid] = waiters
+            if len(self._pending) >= self.max_batch:
+                self._seal_locked()
+
+    def flush(self) -> None:
+        """Seal the current partial batch (client end-of-burst op)."""
+        with self._lock:
+            if self._pending:
+                self._seal_locked()
+
+    def _seal_locked(self) -> None:
+        import concurrent.futures
+        batch, self._pending = self._pending, []
+        self._pending_rids = {}
+        try:
+            futs = self.srv.submit_batch([r for r, _ in batch])
+        except Exception as e:          # refused batch: fail each waiter
+            failed: "concurrent.futures.Future" = concurrent.futures.Future()
+            failed.set_exception(e)
+            for _, waiters in batch:
+                for deliver in waiters:
+                    deliver(failed)
+            return
+        for (req, waiters), fut in zip(batch, futs):
+            self._inflight[req.rid] = fut
+            fut.add_done_callback(self._retire(req.rid))
+            for deliver in waiters:
+                fut.add_done_callback(deliver)
+
+    def _retire(self, rid: str) -> Callable:
+        def cb(fut) -> None:
+            # by resolution time the batch record is durable (the
+            # server fsyncs before resolving), so late duplicates fall
+            # through to the journal replay path
+            with self._lock:
+                self._inflight.pop(rid, None)
+        return cb
+
+
 class ShardHost:
     """TCP host for one or more logical RandService shards.
 
@@ -194,6 +427,7 @@ class ShardHost:
         self.max_frame = max_frame
         self._servers: Dict[int, RandServer] = {}
         self._journals: Dict[int, audit.Journal] = {}
+        self._gates: Dict[int, _Gate] = {}
         self._adopted: set = set()
         self._hung = threading.Event()
         self._lock = threading.Lock()
@@ -224,6 +458,7 @@ class ShardHost:
                          backend=self.backend)
         with self._lock:
             self._servers[shard] = srv
+            self._gates[shard] = _Gate(srv, self.config.max_batch)
             if journal is not None:
                 self._journals[shard] = journal
         return srv
@@ -235,17 +470,17 @@ class ShardHost:
         """
         journal = audit.Journal(journal_path)     # flock = the fence
         try:
+            # the constructor restores + FENCES the journaled ledger
+            # before its pool producers lease ahead (a second restore
+            # here would wipe those producers' reservations)
             srv = RandServer(self.seed, config=self.config,
                              journal=journal, backend=self.backend)
-            # belt over braces: raise the lease floor to the journaled
-            # high-water mark so even explicit at= leases cannot land
-            # below what the dead shard may have served
-            journal.restore_into(srv.block_service, fence=True)
         except Exception:
             journal.close()
             raise
         with self._lock:
             self._servers[shard] = srv
+            self._gates[shard] = _Gate(srv, self.config.max_batch)
             self._journals[shard] = journal
             # the scripted adversary targets a shard's ORIGINAL owner;
             # without this, every process's injector would re-fire the
@@ -274,34 +509,43 @@ class ShardHost:
                              name="shardhost-conn", daemon=True).start()
 
     def _serve_conn(self, conn: socket.socket) -> None:
+        # one write lock per connection: rid-tagged replies are sent by
+        # whichever thread resolves the future (pipelined, possibly out
+        # of order), and must never interleave mid-frame
+        wlock = threading.Lock()
         try:
             while not self._closing.is_set():
                 try:
-                    msg = recv_frame(conn, max_frame=self.max_frame)
+                    got = recv_wire(conn, max_frame=self.max_frame)
                 except FrameTooLarge as e:
                     # the stream cannot be resynced after a bad length:
                     # best-effort error frame, then close
-                    try:
-                        send_frame(conn, {"ok": False,
-                                          "kind": "frame_too_large",
-                                          "error": str(e)})
-                    except OSError:
-                        pass
+                    self._send(conn, wlock, WIRE_V1,
+                               {"ok": False, "kind": "frame_too_large",
+                                "error": str(e)})
                     return
-                except (TornFrame, OSError):
+                except (TornFrame, TransportError, OSError):
                     return          # torn client write: drop the conn only
-                if msg is None:
+                if got is None:
                     return          # clean EOF
+                msg, version = got
+                if msg.get("op") == "request":
+                    try:
+                        self._handle_request(msg, conn, wlock, version)
+                    except _DropReply:
+                        return      # scripted fault: vanish without reply
+                    except Exception as e:   # noqa: BLE001 — reply, don't die
+                        self._send(conn, wlock, version,
+                                   {"ok": False, "kind": "server_error",
+                                    "rid": msg.get("rid"),
+                                    "error": f"{type(e).__name__}: {e}"})
+                    continue
                 try:
                     reply = self._dispatch(msg)
-                except _DropReply:
-                    return          # scripted fault: vanish without reply
                 except Exception as e:   # noqa: BLE001 — reply, don't die
                     reply = {"ok": False, "kind": "server_error",
                              "error": f"{type(e).__name__}: {e}"}
-                try:
-                    send_frame(conn, reply, max_frame=self.max_frame)
-                except OSError:
+                if not self._send(conn, wlock, version, reply):
                     return
         finally:
             with self._lock:
@@ -311,20 +555,72 @@ class ShardHost:
             except OSError:
                 pass
 
+    def _send(self, conn: socket.socket, wlock: threading.Lock,
+              version: int, obj: Dict[str, Any]) -> bool:
+        with wlock:
+            try:
+                send_wire(conn, obj, version=version,
+                          max_frame=self.max_frame)
+                return True
+            except (OSError, TransportError):
+                # receiver gone (or reply unsendable): the client's
+                # retry path owns recovery — journaled work replays
+                return False
+
     # -- op handlers -------------------------------------------------------
 
     def _dispatch(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         op = msg.get("op")
-        if op == "request":
-            return self._handle_request(msg)
         if op == "adopt":
             return self._handle_adopt(msg)
         if op == "stats":
             return self._handle_stats(msg)
+        if op == "hello":
+            return self._handle_hello(msg)
+        if op == "flush":
+            return self._handle_flush(msg)
+        if op == "reset":
+            return self._handle_reset(msg)
         if op == "ping":
             return {"ok": True, "op": "ping", "shards": list(self.shards())}
         return {"ok": False, "kind": "bad_request",
                 "error": f"unknown op {op!r}"}
+
+    def _handle_hello(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """Version negotiation: highest wire version both sides speak.
+
+        The reply itself goes out in the version the hello ARRIVED in
+        (like every reply), so a v1-only peer never sees v2 bytes.
+        """
+        offered = set(msg.get("versions", [WIRE_V1]))
+        common = [v for v in SUPPORTED_VERSIONS if v in offered]
+        if not common:
+            return {"ok": False, "kind": "bad_request",
+                    "error": f"no common wire version in {sorted(offered)}; "
+                             f"supported {list(SUPPORTED_VERSIONS)}"}
+        return {"ok": True, "op": "hello", "version": max(common),
+                "max_batch": self.config.max_batch}
+
+    def _handle_flush(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """Seal the addressed shard's partial batch (end-of-burst)."""
+        try:
+            shard, _ = self._shard_server(msg)
+        except WireError as e:
+            return {"ok": False, "kind": e.kind, "error": str(e)}
+        with self._lock:
+            gate = self._gates.get(shard)
+        if gate is not None:
+            gate.flush()
+        return {"ok": True, "op": "flush", "shard": shard}
+
+    def _handle_reset(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """Zero the shard's serving metrics (benchmark warm-up split)."""
+        try:
+            shard, srv = self._shard_server(msg)
+        except WireError as e:
+            return {"ok": False, "kind": e.kind, "error": str(e)}
+        srv.reset_metrics()
+        return {"ok": True, "op": "reset", "shard": shard}
 
     def _shard_server(self, msg) -> Tuple[int, RandServer]:
         shard = int(msg.get("shard", -1))
@@ -336,11 +632,18 @@ class ShardHost:
                             f"(have {list(self.shards())})")
         return shard, srv
 
-    def _handle_request(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+    def _handle_request(self, msg: Dict[str, Any], conn: socket.socket,
+                        wlock: threading.Lock, version: int) -> None:
+        """Admit one request (reader thread); the reply is sent by the
+        future's done-callback — rid-tagged, possibly out of order with
+        later requests on the same connection (pipelining)."""
         try:
             shard, srv = self._shard_server(msg)
         except WireError as e:
-            return {"ok": False, "kind": e.kind, "error": str(e)}
+            self._send(conn, wlock, version,
+                       {"ok": False, "kind": e.kind,
+                        "rid": msg.get("rid"), "error": str(e)})
+            return
         req = request_from_wire(msg)
         if self._hung.is_set():
             # a hung host is wedged for good: every request (including
@@ -359,6 +662,8 @@ class ShardHost:
                     self._hung.set()
                     time.sleep(3600.0)
                 elif spec.kind == "slow":
+                    # head-of-line on THIS connection only: the reader
+                    # stalls, so later arrivals on the conn queue behind
                     time.sleep(spec.seconds)
                 elif spec.kind == "drop":
                     drop_after = True
@@ -367,16 +672,47 @@ class ShardHost:
             entry = journal.find_request(req.rid)
             if entry is not None:
                 # idempotent retry: the assignment is durable — replay
-                # it instead of serving a second window
+                # it instead of serving a second window.  Never admitted
+                # to the gate, so resubmissions of journaled rids cannot
+                # perturb batch composition.
                 a = audit.replay_entry(entry, seed=self.seed,
                                        backend=self.backend or "xla")
-                return {"ok": True, "rid": req.rid, "replayed": True,
-                        "array": encode_array(a)}
-        result = srv.submit(req).result(timeout=600)
-        if drop_after:
-            raise _DropReply()
-        return {"ok": True, "rid": req.rid, "replayed": False,
-                "array": encode_array(result)}
+                if drop_after:
+                    raise _DropReply()
+                self._send(conn, wlock, version,
+                           {"ok": True, "rid": req.rid, "replayed": True,
+                            "array": np.asarray(a)})
+                return
+        with self._lock:
+            gate = self._gates[shard]
+
+        def deliver(fut) -> None:
+            try:
+                result = fut.result()
+            except Exception as e:      # noqa: BLE001 — reply, don't die
+                obj = {"ok": False, "kind": "server_error",
+                       "rid": req.rid, "error": f"{type(e).__name__}: {e}"}
+            else:
+                obj = {"ok": True, "rid": req.rid, "replayed": False,
+                       "array": np.asarray(result)}
+            if drop_after:
+                # scripted fault: the request WAS served and journaled;
+                # vanish (close the conn) instead of replying
+                self._drop_conn(conn)
+                return
+            self._send(conn, wlock, version, obj)
+
+        gate.admit(req, deliver)
+
+    def _drop_conn(self, conn: socket.socket) -> None:
+        try:
+            conn.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            conn.close()
+        except OSError:
+            pass
 
     def _handle_adopt(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         shard = int(msg["shard"])

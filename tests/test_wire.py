@@ -1,0 +1,323 @@
+"""Wire v2 + pipelined-client tests: framing, negotiation, faults.
+
+Covers the fast-path contracts the fleet rides on:
+
+  * v1 <-> v2 cross-version roundtrip (incl. bfloat16) — byte-exact,
+  * torn/oversize BINARY frame containment (same guarantees as v1),
+  * hello version negotiation (max common version, v1-only fallback),
+  * pipelined client against drop/slow faults: per-tenant delivery
+    order preserved and response digests bit-identical to a fault-free
+    run, with coalescing (max_batch>1) and standing pools enabled,
+  * duplicate resubmission of an in-flight rid attaches (dedup) rather
+    than re-entering the gate,
+  * atomic batch journal records: a torn tail drops the WHOLE last
+    microbatch, never a partial one.
+"""
+import socket
+import struct
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault import FaultInjector, FaultPlan
+from repro.service import audit, transport
+from repro.service.burst import make_requests
+from repro.service.fleet import FleetClient, FleetConfig
+from repro.service.frontend import RandRequest
+from repro.service.server import RandServer, ServerConfig
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(10.0)
+    b.settimeout(10.0)
+    return a, b
+
+
+def _sample_msg():
+    import ml_dtypes
+    return {
+        "ok": True, "rid": "r/0", "n": 3,
+        "f32": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "u32": np.arange(7, dtype=np.uint32),
+        "bf16": np.arange(6).astype(ml_dtypes.bfloat16).reshape(2, 3),
+    }
+
+
+@pytest.mark.parametrize("version", [transport.WIRE_V1, transport.WIRE_V2])
+def test_wire_roundtrip_both_versions(version):
+    a, b = _pair()
+    msg = _sample_msg()
+    transport.send_wire(a, msg, version=version)
+    got, ver = transport.recv_wire(b)
+    assert ver == version
+    for k in ("f32", "u32", "bf16"):
+        want = msg[k]
+        have = got[k] if isinstance(got[k], np.ndarray) \
+            else transport.decode_array(got[k])
+        assert have.dtype == want.dtype
+        assert have.shape == want.shape
+        assert have.tobytes() == want.tobytes()
+    assert got["ok"] is True and got["rid"] == "r/0" and got["n"] == 3
+    a.close(); b.close()
+
+
+def test_wire_cross_version_payloads_identical():
+    """The SAME message sent v1 and v2 decodes to identical bytes —
+    the payload-transparency the binary/json digest pair relies on."""
+    a, b = _pair()
+    msg = _sample_msg()
+    transport.send_wire(a, msg, version=transport.WIRE_V1)
+    transport.send_wire(a, msg, version=transport.WIRE_V2)
+    got1, _ = transport.recv_wire(b)
+    got2, _ = transport.recv_wire(b)
+    for k in ("f32", "u32", "bf16"):
+        a1 = transport.decode_array(got1[k])
+        a2 = got2[k]
+        assert a1.dtype == a2.dtype and a1.tobytes() == a2.tobytes()
+    a.close(); b.close()
+
+
+def test_wire_v2_is_zero_copy_view():
+    a, b = _pair()
+    transport.send_wire(a, {"x": np.arange(64, dtype=np.uint32)},
+                        version=transport.WIRE_V2)
+    got, _ = transport.recv_wire(b)
+    x = got["x"]
+    assert isinstance(x, np.ndarray)
+    assert x.base is not None          # a view over the recv buffer
+    assert not x.flags.writeable       # frombuffer over bytes: read-only
+    a.close(); b.close()
+
+
+def test_wire_v2_smaller_than_v1_for_arrays():
+    a, b = _pair()
+    msg = {"array": np.zeros(8192, dtype=np.float32), "ok": True}
+    n2 = transport.send_wire(a, msg, version=transport.WIRE_V2)
+    transport.recv_wire(b)              # drain between sends: the pair's
+    n1 = transport.send_wire(a, msg, version=transport.WIRE_V1)
+    transport.recv_wire(b)              # kernel buffer is small
+
+    # base64 alone is 4/3 the payload; v2 is payload + tiny header
+    assert n2 < 0.80 * n1
+    a.close(); b.close()
+
+
+def test_wire_v2_torn_header_contained():
+    a, b = _pair()
+    a.sendall(bytes([transport.WIRE_MAGIC]))     # magic alone, then EOF
+    a.close()
+    with pytest.raises(transport.TornFrame):
+        transport.recv_wire(b)
+    b.close()
+
+
+def test_wire_v2_torn_payload_contained():
+    a, b = _pair()
+    msg = {"x": np.arange(1024, dtype=np.float32)}
+    # encode a full frame into a buffer, then send only a prefix
+    class _Buf:
+        def __init__(self): self.data = b""
+        def sendall(self, d): self.data += bytes(d)
+    buf = _Buf()
+    transport.send_wire(buf, msg, version=transport.WIRE_V2)
+    a.sendall(buf.data[:len(buf.data) - 100])
+    a.close()
+    with pytest.raises(transport.TornFrame):
+        transport.recv_wire(b)
+    b.close()
+
+
+def test_wire_v2_oversize_declared_length_contained():
+    a, b = _pair()
+    huge = transport.MAX_FRAME + 1
+    a.sendall(bytes((transport.WIRE_MAGIC, transport.WIRE_V2))
+              + struct.pack("<II", 16, huge))
+    with pytest.raises(transport.FrameTooLarge):
+        transport.recv_wire(b)
+    a.close(); b.close()
+
+
+def test_wire_unknown_version_rejected():
+    a, b = _pair()
+    a.sendall(bytes((transport.WIRE_MAGIC, 9)) + struct.pack("<II", 0, 0))
+    with pytest.raises(transport.TransportError):
+        transport.recv_wire(b)
+    a.close(); b.close()
+
+
+# ---------------------------------------------------------------------------
+# Negotiation + serving
+# ---------------------------------------------------------------------------
+
+def _host(tmp_path, *, max_batch=4, injector=None, hot=()):
+    cfg = ServerConfig(max_batch=max_batch, max_delay_s=0.0,
+                       hot_classes=tuple(hot))
+    host = transport.ShardHost(0, config=cfg, injector=injector)
+    host.add_shard(0, str(tmp_path / "shard0.jsonl"))
+    return host
+
+
+def _hello(addr, versions):
+    with socket.create_connection(addr, timeout=10.0) as s:
+        s.settimeout(10.0)
+        transport.send_wire(s, {"op": "hello", "versions": versions},
+                            version=transport.WIRE_V1)
+        got = transport.recv_wire(s)
+    assert got is not None
+    return got[0]
+
+
+def test_hello_negotiates_max_common_version(tmp_path):
+    host = _host(tmp_path, max_batch=4)
+    try:
+        r = _hello(host.address, [1, 2])
+        assert r["ok"] and r["version"] == transport.WIRE_V2
+        assert r["max_batch"] == 4
+        r = _hello(host.address, [1])
+        assert r["ok"] and r["version"] == transport.WIRE_V1
+        r = _hello(host.address, [99])
+        assert not r["ok"]
+    finally:
+        host.close()
+
+
+def test_shardhost_survives_torn_v2_client(tmp_path):
+    host = _host(tmp_path)
+    try:
+        with socket.create_connection(host.address, timeout=10.0) as s:
+            s.sendall(bytes([transport.WIRE_MAGIC]))   # torn v2 header
+        # host must still answer on a fresh connection
+        reply = transport.rpc(host.address, {"op": "ping"}, timeout=10.0)
+        assert reply["ok"]
+    finally:
+        host.close()
+
+
+def _client(host, tmp_path, **kw):
+    return FleetClient(
+        {0: host.address}, {0: str(tmp_path / "shard0.jsonl")},
+        config=FleetConfig(num_shards=1, journal_dir=str(tmp_path)), **kw)
+
+
+def test_pipelined_client_in_order_delivery(tmp_path):
+    host = _host(tmp_path, hot=(("bits", "float32"),))
+    try:
+        reqs = make_requests(burst=48, tenants=12, seed=5)
+        client = _client(host, tmp_path)
+        out = client.run_shard(0, reqs)
+        assert set(out) == {r.rid for r in reqs}
+        assert [rid for _, rid in client.delivery_log] \
+            == [r.rid for r in reqs]
+        st = client.stats()
+        assert st["requests"] == 48
+        assert st["bytes_on_wire_per_req"] > 0
+        client.close()
+    finally:
+        host.close()
+
+
+def _digest_with_faults(tmp_path, name, plan, **client_kw):
+    jdir = tmp_path / name
+    jdir.mkdir()
+    injector = FaultInjector(plan) if plan else None
+    cfg = ServerConfig(max_batch=4, max_delay_s=0.0,
+                       hot_classes=(("bits", "float32"),
+                                    ("uniform", "float32")))
+    host = transport.ShardHost(0, config=cfg, injector=injector)
+    host.add_shard(0, str(jdir / "shard0.jsonl"))
+    try:
+        reqs = make_requests(burst=48, tenants=12, seed=7)
+        client = FleetClient(
+            {0: host.address}, {0: str(jdir / "shard0.jsonl")},
+            config=FleetConfig(num_shards=1, journal_dir=str(jdir)),
+            **client_kw)
+        out = client.run_shard(0, reqs)
+        order = [rid for _, rid in client.delivery_log]
+        client.close()
+    finally:
+        host.close()
+    assert order == [r.rid for r in reqs]      # in-order delivery held
+    return audit.response_digest(out)
+
+
+@pytest.mark.parametrize("faults", ["drop@13", "slow@11~0.3",
+                                    "drop@5,drop@29"])
+def test_pipelined_faults_preserve_order_and_bytes(tmp_path, faults):
+    """drop/slow against the PIPELINED client: the burst completes,
+    delivery stays in per-tenant order, and every byte matches the
+    fault-free run — with coalescing and pools enabled."""
+    base = _digest_with_faults(tmp_path, "base", None)
+    hurt = _digest_with_faults(tmp_path, "hurt", FaultPlan.parse(faults))
+    assert hurt == base
+
+
+def test_duplicate_inflight_rid_attaches(tmp_path):
+    """A resubmitted rid that is still pending/in-flight must attach to
+    the existing gate entry (one serve, two replies) — the dedup the
+    post-failover resubmission path relies on."""
+    host = _host(tmp_path, max_batch=2)
+    try:
+        req = {"op": "request", "shard": 0, "rid": "dup/0",
+               "tenant": "alice", "shape": [16], "sampler": "uniform",
+               "dtype": "float32"}
+        with socket.create_connection(host.address, timeout=10.0) as s1, \
+                socket.create_connection(host.address, timeout=10.0) as s2:
+            s1.settimeout(30.0); s2.settimeout(30.0)
+            # parked (max_batch=2, only 1 pending) ...
+            transport.send_wire(s1, req)
+            # ... duplicate attaches as a waiter, then flush seals
+            transport.send_wire(s2, dict(req))
+            transport.send_wire(s2, {"op": "flush", "shard": 0})
+            r1 = transport.recv_wire(s1)[0]
+            r2 = transport.recv_wire(s2)[0]
+            while r2.get("rid") is None:       # skip the flush ack
+                r2 = transport.recv_wire(s2)[0]
+        assert r1["ok"] and r2["ok"]
+        a1 = transport.reply_array(r1)
+        a2 = transport.reply_array(r2)
+        assert a1.tobytes() == a2.tobytes()
+        assert a1.shape == (16,)
+        # served exactly once: journal holds ONE record for the rid
+        jr = audit.Journal(str(tmp_path / "shard0.jsonl"), readonly=True)
+        assert len([r for r in jr.requests() if r["rid"] == "dup/0"]) == 1
+    finally:
+        host.close()
+
+
+def test_batch_journal_torn_tail_drops_whole_batch(tmp_path):
+    """Group-committed batch records are atomic: truncating the file
+    mid-line loses the WHOLE last microbatch, never part of one."""
+    path = str(tmp_path / "j.jsonl")
+    srv = RandServer(3, config=ServerConfig(max_batch=4,
+                                            max_delay_s=0.25),
+                     journal=audit.Journal(path), start=False)
+    reqs = [RandRequest(tenant_id=f"t{i % 3}", shape=(8,),
+                        sampler="uniform", out_dtype="float32",
+                        rid=f"r/{i:03d}") for i in range(12)]
+    futs = [srv.submit(r) for r in reqs]
+    srv.start()          # whole burst enqueued: count-based batches of 4
+    for f in futs:
+        f.result(timeout=60)
+    srv.shutdown()
+    whole = audit.Journal(path, readonly=True)
+    n_whole = len(whole.requests())
+    assert n_whole == 12
+    batch_lines = [ln for ln in open(path, "rb").read().splitlines()
+                   if b'"batch"' in ln]
+    assert len(batch_lines) == 3          # 12 requests / max_batch 4
+    # tear the tail: chop into the last line
+    with open(path, "rb") as f:
+        raw = f.read()
+    with open(path, "wb") as f:
+        f.write(raw[:len(raw) - 7])
+    torn = audit.Journal(path, readonly=True)
+    n_torn = len(torn.requests())
+    assert n_torn == 8                    # whole last batch gone
+    # and what remains replays bit-identically
+    replayed = audit.replay(torn, seed=3)
+    assert set(replayed) == {f"r/{i:03d}" for i in range(8)}
