@@ -11,8 +11,8 @@ projected TPU bound (bulk generation writes 4 B/sample; one v5e chip at
 written bytes -> ~410 GSample/s ceiling; the fused-consumer kernels in
 benchmarks/apps.py beat both by never writing the samples).
 
-``run``/``smoke``/``sampler_smoke``/``pipelined_smoke``/``service_smoke``
-also append machine-readable row dicts (GSample/s per
+``run``/``smoke``/``sampler_smoke``/``dist_smoke``/``pipelined_smoke``/
+``service_smoke`` also append machine-readable row dicts (GSample/s per
 backend/sampler/dtype/variant; jitted rows carry ``compile_us`` so
 ``us_per_call`` is always steady state) that ``run.py`` and ``__main__``
 dump to ``BENCH_throughput.json`` — the perf trajectory file.  The
@@ -235,6 +235,72 @@ def sampler_smoke(out=print, records=None) -> None:
         out(row(f"smoke/sampler/{sampler}/{dtype}", 0.0,
                 "matches ref on xla+pallas"))
     _sampler_section(out, records, s=2048, t=2048, iters=2)
+
+
+DIST_CASES = (
+    ("exponential(1.5)", "float32"),
+    ("exponential(1.5)", "bfloat16"),
+    ("poisson(3.5)", "float32"),
+    ("gamma(2.5)", "float32"),
+    ("categorical[0.5,0.25,0.125,0.125]", "float32"),
+)
+
+
+def dist_smoke(out=print, records=None, *, s: int = 2048,
+               t: int = 2048) -> None:
+    """Distribution-stage rows: backend parity at small size, then
+    fused-vs-two-pass GSample/s per (distribution, dtype) at S=2048.
+
+    The fused path applies the distribution transform where the bits are
+    generated (one executable, no uint32 intermediate); the two-pass
+    path materializes the bit block first — the HBM round-trip the
+    in-kernel stages delete.  Gamma is the expensive row (6 unrolled
+    Marsaglia-Tsang retry rows, each with a Box-Muller candidate);
+    poisson costs one compare per threshold-ladder rung; categorical one
+    compare per outcome."""
+    for spec, dtype in DIST_CASES:
+        plan = engine.make_plan(seed=11, num_streams=256, num_steps=64,
+                                sampler=spec, out_dtype=dtype)
+        base = np.asarray(engine.generate(plan, backend="ref"))
+
+        def raw(a):
+            return a.view(np.uint16) if a.dtype == jnp.bfloat16 else a
+
+        for backend in ("xla", "pallas"):
+            got = np.asarray(engine.generate(plan, backend=backend))
+            if backend == "pallas" and spec.startswith(("exponential",
+                                                        "gamma")):
+                # log-based stages: few-ULP libm lane slack on padded
+                # tiles (see tests/test_distributions.py)
+                assert np.allclose(got.astype(np.float32),
+                                   base.astype(np.float32), rtol=1e-5), \
+                    (spec, backend)
+            else:
+                assert np.array_equal(raw(got), raw(base)), (spec, backend)
+        out(row(f"smoke/dist/{spec}/{dtype}", 0.0,
+                "matches ref on xla+pallas"))
+    n = s * t
+    backend = engine.select_backend(
+        engine.make_plan(seed=7, num_streams=s, num_steps=t))
+    for spec, dtype in DIST_CASES:
+        st_f = time_fn_stats(_fused, s, t, spec, dtype, backend, iters=2)
+        st_2 = time_fn_stats(_two_pass, s, t, spec, dtype, backend, iters=2)
+        sec_f, sec_2 = st_f["median_s"], st_2["median_s"]
+        gs_f, gs_2 = n / sec_f / 1e9, n / sec_2 / 1e9
+        speed = sec_2 / sec_f
+        tag = f"{spec}/{dtype}"
+        out(row(f"throughput/dist/{tag}/S={s}", sec_f * 1e6,
+                f"{gs_f:.3f} GSample/s {backend} fused "
+                f"x{speed:.2f} vs two-pass"))
+        _record(records, name=f"dist/{tag}/S={s}", backend=backend,
+                sampler=spec, dtype=dtype, variant="fused",
+                num_streams=s, num_steps=t, us_per_call=st_f["us_per_call"],
+                compile_us=st_f["compile_us"],
+                gsamples_per_s=gs_f, speedup_vs_two_pass=speed)
+        _record(records, name=f"dist/{tag}/S={s}", backend=backend,
+                sampler=spec, dtype=dtype, variant="two_pass",
+                num_streams=s, num_steps=t, us_per_call=st_2["us_per_call"],
+                compile_us=st_2["compile_us"], gsamples_per_s=gs_2)
 
 
 def _consume(block):
@@ -565,6 +631,7 @@ def fleet_smoke(out=print, records=None, *, burst: int = 96,
 SMOKES = {
     "smoke": smoke,
     "sampler": sampler_smoke,
+    "dist": dist_smoke,
     "pipelined": pipelined_smoke,
     "service": service_smoke,
     "fleet": fleet_smoke,

@@ -23,9 +23,11 @@ shape and platform, and every entry point takes a per-call override.
 
 The plan's *sampler* field (``repro.core.sampler``) fuses distribution
 shaping into generation — uniform / Box-Muller normal / exact-threshold
-bernoulli, float32 or bfloat16 — applied in-VMEM by the Pallas kernels
-and as fused elementwise arithmetic by ref/xla, so raw uint32 blocks
-never round-trip through HBM on the way to a float consumer.
+bernoulli plus the programmable distribution stages exponential(rate),
+poisson(rate), gamma(shape) and categorical[w0,w1,...], float32 or
+bfloat16 — applied in-VMEM by the Pallas kernels and as fused
+elementwise arithmetic by ref/xla, so raw uint32 blocks never
+round-trip through HBM on the way to a float consumer.
 ``sample(plan, sampler=...)`` is the per-call override.
 
 ``generate_sharded`` is the multi-device analogue of the paper's instance
@@ -124,10 +126,14 @@ class GenPlan:
               (paper's serial xorshift128 decorrelator).
     deco      ctr-mode hash: "splitmix64" (default) or "fmix32".
     sampler   output stage: "bits" (default), "uniform", "normal"
-              (Box-Muller over adjacent row pairs; T must be even) or
-              "bernoulli(p)".  See ``repro.core.sampler``.
+              (Box-Muller over adjacent row pairs; T must be even),
+              "bernoulli(p)", or a distribution stage —
+              "exponential(rate)", "poisson(rate)", "gamma(shape)",
+              "categorical[w0,w1,...]" (all elementwise, any T).
+              Grammar in ``repro.core.sampler.SPEC_GRAMMAR``.
     out_dtype "float32" or "bfloat16" for the float samplers (bits is
-              always uint32, bernoulli always bool).
+              always uint32, bernoulli always bool; distribution counts
+              and category indices are float-coded exact integers).
 
     Example:
         >>> from repro.core import engine

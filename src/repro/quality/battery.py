@@ -19,10 +19,17 @@ Verdict semantics reproduce the paper's Table 3/4 ordering at real
 discriminating power:
 
   * every ``thundering/*`` generator must PASS (intra and cross),
+  * every ``dist/*`` generator — the fused distribution stages
+    (exponential, poisson, gamma, categorical) on all three backends,
+    reduced to uniform words by the probability integral transform
+    (``repro.quality.pit``) — must PASS,
   * the ``ablation/raw_lcg`` (no permutation, no decorrelator) and
     ``ablation/no_deco`` (permutation only) generators must FAIL the
-    cross-battery — the top-level ``ok`` flag is true only when every
-    generator behaves as expected.
+    cross-battery, and ``ablation/raw_lcg_pit`` (raw LCG pushed through
+    the exponential stage) must STILL fail through the PIT — the
+    distribution transform does not launder a flawed source — the
+    top-level ``ok`` flag is true only when every generator behaves as
+    expected.
 """
 from __future__ import annotations
 
@@ -67,9 +74,11 @@ PROFILES: Dict[str, Profile] = {
     # benchmark/tier-1 smoke: seconds, still separates the ablations.
     "tiny": Profile("tiny", intra_t=1024, intra_s=8,
                     cross_s=128, cross_t=1024, max_pairs=16),
-    # slow battery (pytest -m slow): SmallCrush-scale sample sizes.
+    # slow battery (the scheduled quality-full CI job and pytest -m
+    # slow): SmallCrush-scale sample sizes; cross_s = 2**14 rides the
+    # blocked Gram sweep (cross.SWEEP_BLOCK tiles).
     "full": Profile("full", intra_t=16384, intra_s=64,
-                    cross_s=2048, cross_t=4096, max_pairs=64),
+                    cross_s=16384, cross_t=4096, max_pairs=64),
 }
 
 
@@ -165,6 +174,56 @@ def _ablation_block(seed: int, t: int, s: int, kind: str) -> np.ndarray:
     return np.asarray(streams).T.copy()
 
 
+def _dist_block(seed: int, t: int, s: int, spec: str, mode: str,
+                backend: str) -> np.ndarray:
+    """(T, S) uint32 PIT words for a distribution stage.
+
+    Shaped samples come through the real delivery surface
+    (``engine.generate`` with the sampler spec fused in-plan, on the
+    requested backend); the randomization bits of the PIT come from an
+    independent draw of the same family (engine purpose 1), matching
+    ``repro.quality.pit``'s independence requirement.  A correct stage
+    yields words statistically indistinguishable from the raw
+    generator's, so the full Crush-lite/cross machinery tests the
+    distribution kernels at the same discriminating power as the bits
+    path.
+    """
+    from repro.core import engine
+    from repro.quality import pit
+    plan = engine.make_plan(seed=seed, num_streams=s, num_steps=t,
+                            mode=mode, sampler=spec)
+    x = np.asarray(engine.generate(plan, backend=backend))
+    vplan = engine.make_plan(seed=seed, num_streams=s, num_steps=t,
+                             mode=mode, purpose=1)
+    v = np.asarray(engine.generate(vplan, backend=backend))
+    return pit.pit_words(x, spec, v)
+
+
+def _ablation_pit_block(seed: int, t: int, s: int) -> np.ndarray:
+    """(T, S) uint32: raw-LCG bits pushed through the exponential stage
+    and reduced by the PIT — the transform-laundering ablation.
+
+    Must FAIL the cross-battery: the PIT maps each sample back through
+    its own CDF, so the inter-stream correlation of the flawed upstream
+    generator survives the distribution transform intact.  This is the
+    ablation that proves the PIT reduction preserves discriminating
+    power (a battery that only tested the uniform path could be fooled
+    by a sampler fed from a bad source).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import baselines
+    from repro.core import sampler as sampler_mod
+    from repro.quality import pit
+    bits = np.ascontiguousarray(
+        np.asarray(baselines.raw_lcg_bits(seed, s, t)).T)
+    spec = sampler_mod.parse("exponential(1.0)")
+    x = np.asarray(sampler_mod.apply(jnp.asarray(bits), spec, "float32"))
+    v = np.ascontiguousarray(
+        np.asarray(baselines.raw_lcg_bits(seed ^ 0x9E3779B9, s, t)).T)
+    return pit.pit_words(x, spec, v)
+
+
 # ---------------------------------------------------------------------------
 # two-level intra battery
 # ---------------------------------------------------------------------------
@@ -211,12 +270,21 @@ class GeneratorConfig:
     name: str
     expect: str                   # "pass" | "fail"
     delivery: str                 # provenance string for the report
-    kind: str = "engine"          # "engine" | "leased" | "sharded" | ablation
+    kind: str = "engine"          # "engine" | "leased" | "sharded" |
+                                  # "service" | "dist" | ablation
     mode: str = "ctr"
     deco: str = "splitmix64"
     backend: str = "xla"
+    sampler: str = "bits"         # distribution spec for kind="dist"
     run_intra: bool = True
     run_cross: bool = False
+
+
+#: the distribution stages the battery PIT-verifies (one spec per kind,
+#: matching the service burst classes so the battery and the serving
+#: path exercise the same kernels)
+DIST_SPECS: tuple = ("exponential(1.5)", "poisson(3.5)", "gamma(2.5)",
+                     "categorical[0.5,0.25,0.125,0.125]")
 
 
 def battery_configs() -> List[GeneratorConfig]:
@@ -253,11 +321,32 @@ def battery_configs() -> List[GeneratorConfig]:
         mode="ctr", backend="xla", run_cross=True,
         delivery="repro.service coalesced frontend (one request per "
                  "tenant, replay parity-checked vs engine.generate)"))
+    for spec in DIST_SPECS:
+        dist = spec.split("(")[0].split("[")[0]
+        for backend in ("ref", "xla", "pallas"):
+            # the xla draws for the two analytically-invertible stages
+            # also run the cross-battery (the PIT words must stay
+            # pairwise independent ACROSS streams, not just uniform
+            # within one); ref/pallas draws are bit-identical to xla, so
+            # intra coverage there is a parity claim, not extra power
+            cfgs.append(GeneratorConfig(
+                name=f"dist/{dist}/{backend}", expect="pass", kind="dist",
+                mode="ctr", backend=backend, sampler=spec,
+                run_cross=(backend == "xla"
+                           and dist in ("exponential", "poisson")),
+                delivery=f"engine.generate(sampler={spec!r}, "
+                         f"backend={backend!r}) -> quality.pit"))
     for kind in ("raw_lcg", "no_deco"):
         cfgs.append(GeneratorConfig(
             name=f"ablation/{kind}", expect="fail", kind=kind,
             mode="-", deco="-", backend="-", run_cross=True,
             delivery="core.baselines.raw_lcg_bits"))
+    cfgs.append(GeneratorConfig(
+        name="ablation/raw_lcg_pit", expect="fail", kind="raw_lcg_pit",
+        mode="-", deco="-", backend="-", sampler="exponential(1.0)",
+        run_intra=False, run_cross=True,
+        delivery="core.baselines.raw_lcg_bits -> sampler.apply"
+                 "('exponential(1.0)') -> quality.pit"))
     return cfgs
 
 
@@ -270,6 +359,10 @@ def _draw(cfg: GeneratorConfig, seed: int, t: int, s: int) -> np.ndarray:
         return _sharded_block(seed, t, s, cfg.mode, cfg.deco)
     if cfg.kind == "service":
         return _service_block(seed, t, s, cfg.deco)
+    if cfg.kind == "dist":
+        return _dist_block(seed, t, s, cfg.sampler, cfg.mode, cfg.backend)
+    if cfg.kind == "raw_lcg_pit":
+        return _ablation_pit_block(seed, t, s)
     return _ablation_block(seed, t, s, cfg.kind)
 
 
@@ -325,6 +418,7 @@ def run_battery(profile: str = "fast", *, seed: int = DEFAULT_SEED,
         entry: Dict = {"name": cfg.name, "expect": cfg.expect,
                        "delivery": cfg.delivery, "mode": cfg.mode,
                        "deco": cfg.deco, "backend": cfg.backend,
+                       "sampler": cfg.sampler,
                        "intra": None, "cross": None}
         if cfg.run_intra:
             block = _draw(cfg, seed, prof.intra_t, prof.intra_s)

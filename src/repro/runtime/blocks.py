@@ -28,7 +28,10 @@ delivery layer, sitting ABOVE the engine:
 
 Generation itself is one jitted window function per (channel, length,
 sampler) with a TRACED counter, so successive leases of equal length
-re-use one executable (no per-window retrace), and the service's mesh —
+re-use one executable (no per-window retrace) — this covers every
+sampler stage including the distribution stages (exponential/poisson/
+gamma/categorical), whose parsed specs are hashable compile-time
+constants — and the service's mesh —
 including the 2-D ``(hosts, streams)`` fan-out of
 ``engine.generate_sharded`` — rides inside the jit.
 

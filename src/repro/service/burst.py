@@ -19,13 +19,20 @@ import numpy as np
 
 from repro.service.frontend import RandRequest
 
-#: the mixed request classes a burst cycles through
+#: the mixed request classes a burst cycles through — spans the full
+#: sampler grammar including the distribution stages, so every burst
+#: (CI service job, fleet failover rounds, acceptance tests) exercises
+#: shaped-request journal replay for free
 BURST_CLASSES: Tuple[Tuple[str, str], ...] = (
     ("bits", "float32"),
     ("uniform", "float32"),
     ("uniform", "bfloat16"),
     ("normal", "float32"),
     ("bernoulli(0.25)", "float32"),
+    ("exponential(1.5)", "float32"),
+    ("poisson(3.5)", "bfloat16"),
+    ("gamma(2.5)", "float32"),
+    ("categorical[0.5,0.25,0.125,0.125]", "float32"),
 )
 
 

@@ -33,9 +33,21 @@ The per-shape jitted window functions keep the counter and the tag
 table TRACED, so steady traffic reuses a small set of executables
 (shapes are quantized: rows to powers of two up to ``max_rows``,
 columns padded to the next power of two).
+
+Request classes span the full sampler grammar — "tenant A wants
+Poisson(3.5) bfloat16" is just ``RandRequest(sampler="poisson(3.5)",
+out_dtype="bfloat16")`` — and every distribution parameter is part of
+the class key, so ``exponential(1.5)`` and ``exponential(2.0)`` get
+disjoint GenPlan families.  Because adversarial (or merely diverse)
+tenants can mint unboundedly many classes, the jitted window-fn cache
+is LRU-BOUNDED at ``WINDOW_FN_CACHE_SIZE`` entries: a hot set of
+classes stays compiled while a million-class churn can only ever pin
+``WINDOW_FN_CACHE_SIZE`` executables (evicted classes re-jit on next
+use — correctness is unaffected, the cache is purely a retrace saver).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -51,6 +63,12 @@ from repro.service import tenants as tenants_mod
 #: row-count ceiling for one coalesced window (counter steps per lease)
 DEFAULT_MAX_ROWS = 2048
 _MIN_ROWS = 8
+
+#: LRU bound on the coalescer's jitted window-fn cache: one entry per
+#: (purpose, rows, cols, sampler, out_dtype) shape class.  Tenants
+#: choose sampler specs, so the class space is unbounded; the cache
+#: must not be.
+WINDOW_FN_CACHE_SIZE = 64
 
 
 def class_channel(sampler: str, out_dtype: str) -> str:
@@ -165,14 +183,20 @@ class Coalescer:
                  registry: tenants_mod.TenantRegistry, *,
                  journal=None, backend: Optional[str] = None,
                  deco: str = "splitmix64",
-                 max_rows: int = DEFAULT_MAX_ROWS):
+                 max_rows: int = DEFAULT_MAX_ROWS,
+                 window_fn_cache_size: int = WINDOW_FN_CACHE_SIZE):
         self.service = service
         self.registry = registry
         self.journal = journal
         self.backend = backend
         self.deco = deco
         self.max_rows = max_rows
-        self._window_fns: Dict[Tuple, Callable] = {}
+        self.window_fn_cache_size = int(window_fn_cache_size)
+        if self.window_fn_cache_size < 1:
+            raise ValueError(f"window_fn_cache_size must be >= 1, got "
+                             f"{window_fn_cache_size!r}")
+        self._window_fns: "collections.OrderedDict[Tuple, Callable]" = \
+            collections.OrderedDict()
         self._fn_lock = threading.Lock()
         # cumulative coalescing stats (read by RandServer.stats)
         self.requests_served = 0
@@ -189,11 +213,15 @@ class Coalescer:
 
         Tags and counter are TRACED; only (purpose, rows, padded cols,
         sampler, dtype) key the cache, so steady mixed traffic runs on
-        a handful of executables.
+        a handful of executables.  The cache is LRU-bounded at
+        ``window_fn_cache_size`` entries (class churn evicts, never
+        grows without bound); an evicted class simply re-jits.
         """
         key = (purpose, rows, cols, sampler, out_dtype)
         with self._fn_lock:
             fn = self._window_fns.get(key)
+            if fn is not None:
+                self._window_fns.move_to_end(key)
         if fn is not None:
             return fn
         x0, h_fam = engine.family_from_seed(self.service.seed, purpose)
@@ -215,6 +243,9 @@ class Coalescer:
 
         with self._fn_lock:
             fn = self._window_fns.setdefault(key, window)
+            self._window_fns.move_to_end(key)
+            while len(self._window_fns) > self.window_fn_cache_size:
+                self._window_fns.popitem(last=False)
         return fn
 
     # -- batching ----------------------------------------------------------
@@ -354,4 +385,6 @@ class Coalescer:
             "samples_generated": self.samples_generated,
             "fill_ratio": self.samples_served
                           / max(1, self.samples_generated),
+            "window_fn_cache": len(self._window_fns),
+            "window_fn_cache_max": self.window_fn_cache_size,
         }

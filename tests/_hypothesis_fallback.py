@@ -4,7 +4,7 @@ The tier-1 suite property-tests the u64/LCG/xorshift cores with
 hypothesis; some environments (including the container this repo is
 validated in) cannot pip-install it.  This module provides just enough of
 the API surface the tests use — ``given``, ``settings`` and the
-``integers`` / ``sampled_from`` / ``tuples`` strategies — running each
+``integers`` / ``floats`` / ``sampled_from`` / ``tuples`` strategies — running each
 test over the strategy's boundary values plus seeded-random draws.  It is
 NOT a property-testing framework (no shrinking, no coverage-guided
 search); when the real hypothesis is importable, ``conftest.py`` never
@@ -35,6 +35,14 @@ def integers(min_value=None, max_value=None):
     hi = (1 << 64) if max_value is None else int(max_value)
     edges = sorted({lo, hi, min(lo + 1, hi), max(hi - 1, lo)})
     return _Strategy(lambda r: r.randint(lo, hi), edges)
+
+
+def floats(min_value, max_value, **_ignored):
+    """Bounded floats only (the shim has no NaN/inf generation): edges
+    are the two endpoints and the midpoint, random draws uniform."""
+    lo, hi = float(min_value), float(max_value)
+    edges = sorted({lo, hi, (lo + hi) / 2.0})
+    return _Strategy(lambda r: r.uniform(lo, hi), edges)
 
 
 def sampled_from(elements):
@@ -94,6 +102,7 @@ def install() -> None:
     mod.settings = settings
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = integers
+    st_mod.floats = floats
     st_mod.sampled_from = sampled_from
     st_mod.tuples = tuples
     mod.strategies = st_mod

@@ -1,0 +1,372 @@
+"""Distribution stages end to end: every (dist x backend x mode x dtype)
+cell bit-exact vs the ref oracle, parse-grammar errors, edge cases
+(rate -> 0, k = 1 gamma, single-outcome categorical), open-interval /
+support guards, PIT correctness, and hypothesis-driven moment/KS checks
+at S = 4096."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import engine, sampler as sampler_mod
+from repro.quality import pit
+
+BACKENDS = ("ref", "xla", "pallas")
+MODES = ("ctr", "faithful")
+DTYPES = ("float32", "bfloat16")
+DIST_SAMPLERS = ("exponential(1.5)", "poisson(3.5)", "gamma(2.5)",
+                 "categorical[0.5,0.25,0.125,0.125]")
+
+
+def _raw(a):
+    a = np.asarray(a)
+    return a.view(np.uint16) if a.dtype == jnp.bfloat16 else a.view(np.uint32)
+
+
+def _bits(n, salt=0x9E3779B9):
+    """Deterministic well-mixed uint32 test words."""
+    return sampler_mod.remix_bits(
+        jnp.arange(n, dtype=jnp.uint32) * np.uint32(salt), 7)
+
+
+def _ulp_diff(a, b):
+    """Max ULP distance between equal-dtype float arrays (f32 only here;
+    bf16 comparisons in this file are all exact)."""
+    ai = np.asarray(a).view(np.int32).astype(np.int64)
+    bi = np.asarray(b).view(np.int32).astype(np.int64)
+    return int(np.abs(ai - bi).max()) if ai.size else 0
+
+
+def _assert_dist_matches(out, base, spec, ctx, pallas=False):
+    """ref and xla are BIT-exact for every distribution stage (gamma's
+    multiply-add chains are pinned with ``sampler.fma_guard`` so XLA's
+    shape-dependent FMA contraction cannot split executables — the
+    property journal replay relies on).  The pallas interpreter matches
+    bit-exactly for the transcendental-free stages (poisson,
+    categorical) and to a few ULP for the log-based ones (exponential,
+    gamma): at tile-padded shapes the log of an element can take the
+    SIMD-vs-remainder libm path the other backend didn't — the same
+    documented slack as the "normal" stage."""
+    assert out.shape == base.shape and out.dtype == base.dtype, ctx
+    log_based = spec.startswith(("exponential", "gamma"))
+    if pallas and log_based and np.asarray(out).dtype == np.float32:
+        assert _ulp_diff(out, base) <= 8, ctx
+    else:
+        assert np.array_equal(_raw(out), _raw(base)), ctx
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: every cell bit-exact vs the ref oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("spec", DIST_SAMPLERS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_distribution_backend_parity(backend, mode, spec, dtype):
+    plan = engine.make_plan(seed=91, num_streams=36, num_steps=12, offset=4,
+                            mode=mode, sampler=spec, out_dtype=dtype)
+    base = engine.generate(plan, backend="ref")
+    out = engine.generate(plan, backend=backend)
+    _assert_dist_matches(out, base, spec, (backend, mode, spec, dtype),
+                         pallas=(backend == "pallas"))
+
+
+@pytest.mark.parametrize("T,S", [(10, 4), (40, 257), (256, 130)])
+def test_distribution_awkward_shapes_pallas(T, S):
+    """Pallas tiling/padding never leaks into real rows; (256, 130) is
+    the shape where the padded last tile provably shifts libm lane
+    positions, exercising the ULP-slack branch of the contract."""
+    for spec in DIST_SAMPLERS:
+        plan = engine.make_plan(seed=17, num_streams=S, num_steps=T,
+                                sampler=spec)
+        _assert_dist_matches(engine.generate(plan, backend="pallas"),
+                             engine.generate(plan, backend="ref"),
+                             spec, (T, S, spec), pallas=True)
+
+
+@pytest.mark.parametrize("spec", DIST_SAMPLERS)
+def test_distribution_shape_invariant_under_jit(spec):
+    """The same words transform to the same bytes at ANY batch shape,
+    eager or jitted — the property journal replay depends on (the
+    coalescer serves padded batches, the auditor replays per-request
+    shapes)."""
+    import jax
+    parsed = sampler_mod.parse(spec)
+    flat = _bits(1792)
+    base = np.asarray(sampler_mod.apply(flat, parsed, "float32"))
+    for shape in [(1792,), (64, 28), (7, 256), (1792, 1)]:
+        out = jax.jit(
+            lambda b: sampler_mod.apply(b, parsed, "float32"))(
+                flat.reshape(shape))
+        assert np.array_equal(
+            base, np.asarray(out).ravel()), (spec, shape)
+
+
+@pytest.mark.parametrize("spec,dtype", [("exponential(0.5)", "bfloat16"),
+                                        ("gamma(4.0)", "float32"),
+                                        ("poisson(10.0)", "float32")])
+def test_generate_sharded_distribution(spec, dtype):
+    plan = engine.make_plan(seed=13, num_streams=22, num_steps=16,
+                            sampler=spec, out_dtype=dtype)
+    assert np.array_equal(_raw(engine.generate(plan, backend="xla")),
+                          _raw(engine.generate_sharded(plan)))
+
+
+# ---------------------------------------------------------------------------
+# spec grammar: parse acceptance and rejection tables
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("text,expect", [
+    ("exponential(1.5)", ("exponential", 1.5)),
+    ("poisson(0.0)", ("poisson", 0.0)),
+    ("gamma(2.5)", ("gamma", 2.5)),
+    ("categorical[1,1,2]", ("categorical", (1.0, 1.0, 2.0))),
+    ("categorical[ 0.5 , 0.5 ]", ("categorical", (0.5, 0.5))),
+])
+def test_parse_accepts(text, expect):
+    assert sampler_mod.parse(text) == expect
+
+
+@pytest.mark.parametrize("bad", [
+    "gamma",                       # bare name: parens required
+    "gamma()",                     # empty param
+    "gamma(0.5)",                  # shape < 1 unsupported (M-T needs k>=1)
+    "gamma(nan)",                  # non-finite
+    "exponential(0)",              # rate must be > 0
+    "exponential(-1)",
+    "poisson(-0.5)",               # rate must be >= 0
+    "poisson(33)",                 # above POISSON_MAX_RATE ladder bound
+    "poisson(two)",                # not a float
+    "categorical[]",               # no outcomes
+    "categorical[1,-2]",           # negative weight
+    "categorical[0,0]",            # zero total mass
+    "categorical[" + ",".join(["1"] * 65) + "]",   # > max outcomes
+    "exponential[1.5]",            # wrong bracket style
+    "weibull(2.0)",                # unknown distribution
+])
+def test_parse_rejects_with_grammar(bad):
+    """Every rejection names the spec grammar so callers can self-serve
+    (bare names like "gamma" must still carry the historical "unknown
+    sampler" prefix relied on by engine error paths)."""
+    with pytest.raises(ValueError) as ei:
+        sampler_mod.parse(bad)
+    msg = str(ei.value)
+    assert "grammar" in msg or "must" in msg, bad
+    if bad in ("gamma", "weibull(2.0)", "exponential[1.5]"):
+        assert "unknown sampler" in msg
+        assert sampler_mod.SPEC_GRAMMAR.split("|")[0].strip() in msg
+
+
+def test_spec_grammar_names_every_stage():
+    for kind in sampler_mod.DISTRIBUTION_KINDS:
+        assert kind in sampler_mod.SPEC_GRAMMAR
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+def test_poisson_rate_zero_is_all_zeros():
+    """lambda -> 0: the threshold ladder is empty, every count is 0 on
+    every backend (and the spec is still a valid request class)."""
+    assert sampler_mod.poisson_thresholds(0.0) == ()
+    plan = engine.make_plan(seed=3, num_streams=8, num_steps=16,
+                            sampler="poisson(0.0)")
+    for backend in BACKENDS:
+        out = np.asarray(engine.generate(plan, backend=backend))
+        assert out.dtype == np.float32 and np.all(out == 0.0), backend
+
+
+def test_poisson_tiny_rate_mostly_zero():
+    plan = engine.make_plan(seed=3, num_streams=64, num_steps=64,
+                            sampler="poisson(0.001)")
+    out = np.asarray(engine.generate(plan, backend="xla"))
+    assert out.mean() < 0.01 and out.min() == 0.0
+
+
+def test_gamma_shape_one_is_exact_exponential():
+    """k = 1 short-circuits to the exponential inversion — bit-identical,
+    not approximately equal (Gamma(1) IS Exponential(1))."""
+    kw = dict(seed=7, num_streams=32, num_steps=64)
+    g = engine.generate(engine.make_plan(sampler="gamma(1.0)", **kw),
+                        backend="xla")
+    e = engine.generate(engine.make_plan(sampler="exponential(1.0)", **kw),
+                        backend="xla")
+    assert np.array_equal(_raw(g), _raw(e))
+
+
+def test_single_outcome_categorical_is_zero():
+    assert sampler_mod.alias_table((3.0,)) == ((1.0, 0),)
+    plan = engine.make_plan(seed=5, num_streams=8, num_steps=8,
+                            sampler="categorical[3.0]")
+    for backend in BACKENDS:
+        out = np.asarray(engine.generate(plan, backend=backend))
+        assert np.all(out == 0.0), backend
+
+
+def test_categorical_zero_weight_outcome_never_drawn():
+    plan = engine.make_plan(seed=5, num_streams=64, num_steps=256,
+                            sampler="categorical[1.0,0.0,1.0]")
+    out = np.asarray(engine.generate(plan, backend="xla"))
+    assert not np.any(out == 1.0)
+    assert set(np.unique(out)) <= {0.0, 2.0}
+
+
+# ---------------------------------------------------------------------------
+# support / open-interval guards
+# ---------------------------------------------------------------------------
+
+def test_exponential_finite_on_extreme_bits():
+    """All-zero and all-one words map to finite, strictly positive
+    exponentials on every backend: uniform_from_bits never returns 1.0
+    (no log(0)) and the u = 0 word maps to -log(1) = 0 exactly."""
+    bits = jnp.array([[0, 0xFFFFFFFF], [0xFFFFFFFF, 0]], jnp.uint32)
+    for spec in ("exponential(1.5)", "gamma(2.5)"):
+        x = np.asarray(sampler_mod.apply(bits, sampler_mod.parse(spec),
+                                         "float32"))
+        assert np.all(np.isfinite(x)), spec
+        assert np.all(x >= 0.0), spec
+
+
+def test_exponential_nonnegative_and_moments():
+    plan = engine.make_plan(seed=1234, num_streams=4096, num_steps=64,
+                            sampler="exponential(1.5)")
+    x = np.asarray(engine.generate(plan, backend="xla"), dtype=np.float64)
+    n = x.size
+    assert np.all(x >= 0.0) and np.all(np.isfinite(x))
+    assert abs(x.mean() - 1 / 1.5) < 4 * (1 / 1.5) / np.sqrt(n)
+    assert abs(x.var() - 1 / 1.5 ** 2) < 6 * (1 / 1.5 ** 2) / np.sqrt(n)
+
+
+def test_poisson_counts_in_truncated_support():
+    rate = 3.5
+    kmax = len(sampler_mod.poisson_thresholds(rate))
+    plan = engine.make_plan(seed=99, num_streams=1024, num_steps=64,
+                            sampler=f"poisson({rate})")
+    out = np.asarray(engine.generate(plan, backend="xla"))
+    assert out.min() >= 0 and out.max() <= kmax
+    assert np.array_equal(out, np.rint(out))  # float-coded exact integers
+
+
+def test_categorical_indices_in_range():
+    plan = engine.make_plan(seed=99, num_streams=1024, num_steps=16,
+                            sampler="categorical[1,2,3,4,5]")
+    out = np.asarray(engine.generate(plan, backend="xla"))
+    assert out.min() >= 0 and out.max() <= 4
+    assert np.array_equal(out, np.rint(out))
+
+
+def test_gamma_fallback_bounds_support():
+    """Even adversarial words stay on (0, inf): every retry row rejecting
+    falls back to the central value d, never to garbage."""
+    x = np.asarray(sampler_mod.apply(
+        _bits(1 << 16), sampler_mod.parse("gamma(5.0)"), "float32"))
+    assert np.all(x > 0.0) and np.all(np.isfinite(x))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: moment/KS battery at S = 4096 over parameters and seeds
+# ---------------------------------------------------------------------------
+
+def _draw_block(spec, seed, S=4096, T=16):
+    plan = engine.make_plan(seed=seed, num_streams=S, num_steps=T,
+                            sampler=spec)
+    return np.asarray(engine.generate(plan, backend="xla"),
+                      dtype=np.float64), S * T
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.floats(0.25, 8.0), st.integers(0, 2 ** 31 - 1))
+def test_exponential_moments_hypothesis(rate, seed):
+    x, n = _draw_block(f"exponential({rate!r})", seed)
+    assert abs(x.mean() - 1 / rate) < 5 * (1 / rate) / np.sqrt(n)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.floats(0.25, 16.0), st.integers(0, 2 ** 31 - 1))
+def test_poisson_moments_hypothesis(rate, seed):
+    x, n = _draw_block(f"poisson({rate!r})", seed)
+    sd = np.sqrt(rate / n)
+    assert abs(x.mean() - rate) < 5 * sd + 1e-6
+    assert abs(x.var() - rate) < 6 * rate / np.sqrt(n) + 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.floats(1.0, 16.0), st.integers(0, 2 ** 31 - 1))
+def test_gamma_moments_hypothesis(shape, seed):
+    x, n = _draw_block(f"gamma({shape!r})", seed)
+    assert abs(x.mean() - shape) < 5 * np.sqrt(shape / n)
+    assert abs(x.var() - shape) < 8 * shape / np.sqrt(n)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_categorical_frequencies_hypothesis(k, seed):
+    w = tuple(float(i + 1) for i in range(k))
+    total = sum(w)
+    x, n = _draw_block("categorical[" + ",".join(map(str, w)) + "]", seed)
+    for i, wi in enumerate(w):
+        p = wi / total
+        assert abs((x == i).mean() - p) < 5 * np.sqrt(p * (1 - p) / n)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_exponential_pit_ks_uniform(seed):
+    """The PIT reduction of a correct exponential draw is KS-uniform —
+    the property the quality battery's dist generators rely on."""
+    from repro.core import statistics as stats
+    x, _ = _draw_block("exponential(1.5)", seed, S=512, T=8)
+    u = -np.expm1(-1.5 * x)
+    assert stats.ks_uniform_pvalue(u.ravel()) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# PIT reduction unit behavior
+# ---------------------------------------------------------------------------
+
+def test_regularized_gamma_p_against_closed_forms():
+    x = np.linspace(0.01, 40.0, 4001)
+    # P(1, x) = 1 - exp(-x)
+    assert np.allclose(pit.regularized_gamma_p(1.0, x), -np.expm1(-x),
+                       atol=1e-13)
+    # P(2, x) = 1 - (1 + x) exp(-x)
+    assert np.allclose(pit.regularized_gamma_p(2.0, x),
+                       1.0 - (1.0 + x) * np.exp(-x), atol=1e-13)
+    # P(0.5, x) = erf(sqrt(x))
+    erf = np.vectorize(math.erf)
+    assert np.allclose(pit.regularized_gamma_p(0.5, x), erf(np.sqrt(x)),
+                       atol=1e-12)
+    assert pit.regularized_gamma_p(3.0, np.array([0.0, -1.0])).tolist() \
+        == [0.0, 0.0]
+
+
+def test_pit_words_rejects_bad_inputs():
+    x = np.ones(4, np.float32)
+    v = np.zeros(4, np.uint32)
+    with pytest.raises(ValueError, match="not a distribution stage"):
+        pit.pit_words(x, "uniform", v)
+    with pytest.raises(ValueError, match="v_bits"):
+        pit.pit_words(x, "exponential(1.0)", np.zeros(3, np.uint32))
+    with pytest.raises(ValueError, match="v_bits"):
+        pit.pit_words(x, "exponential(1.0)", np.zeros(4, np.uint64))
+
+
+def test_pit_discrete_randomization_spans_cells():
+    """With V = 0 the word sits at the cell floor F(k-1); with V -> 1 it
+    approaches F(k): the randomized PIT fills each pmf cell."""
+    x = np.array([0.0, 1.0, 2.0], np.float32)
+    lo = pit.pit_words(x, "poisson(3.5)",
+                       np.zeros(3, np.uint32)).astype(np.float64) * 2.0 ** -32
+    hi = pit.pit_words(x, "poisson(3.5)",
+                       np.full(3, 0xFFFFFFFF, np.uint32)
+                       ).astype(np.float64) * 2.0 ** -32
+    cdf = pit.discrete_cdf_table("poisson", 3.5)
+    for k in range(3):
+        f_lo = 0.0 if k == 0 else cdf[k - 1]
+        assert abs(lo[k] - f_lo) < 1e-9
+        assert abs(hi[k] - cdf[k]) < 1e-6

@@ -13,8 +13,8 @@ import doctest
 
 import pytest
 
-from repro.core import engine, stream
-from repro.quality import battery
+from repro.core import engine, sampler, stream
+from repro.quality import battery, cross, pit
 from repro.runtime import blocks
 from repro.service import audit, frontend, server, tenants
 
@@ -46,6 +46,22 @@ PUBLIC_SYMBOLS = [
     stream.bernoulli,
     stream.gumbel,
     stream.categorical,
+    sampler.parse,
+    sampler.apply,
+    sampler.result_dtype,
+    sampler.fma_guard,
+    sampler.remix_bits,
+    sampler.poisson_thresholds,
+    sampler.gamma_mt_constants,
+    sampler.alias_table,
+    sampler.exponential_from_bits,
+    sampler.gamma_from_bits,
+    sampler.categorical_from_bits,
+    pit.regularized_gamma_p,
+    pit.continuous_cdf,
+    pit.discrete_cdf_table,
+    pit.pit_words,
+    cross.pairwise_sweep,
     blocks.BlockService,
     blocks.BlockService.open,
     blocks.BlockService.lease,
@@ -85,6 +101,9 @@ EXAMPLE_BEARING = [
     stream.advance, stream.random_bits, stream.uniforms, stream.normals,
     stream.uniform, stream.normal, stream.bernoulli, stream.gumbel,
     stream.categorical,
+    sampler.parse, sampler.apply, sampler.result_dtype,
+    sampler.poisson_thresholds, sampler.alias_table,
+    pit.regularized_gamma_p, pit.discrete_cdf_table, pit.pit_words,
     blocks.BlockService, blocks.Lease, blocks.BlockProducer,
     battery.run_battery,
     tenants.tenant_region, tenants.TenantRegistry,
@@ -110,8 +129,8 @@ def test_public_symbol_has_example(symbol):
         f"{symbol!r} must carry a runnable Example: doctest block")
 
 
-@pytest.mark.parametrize("module", [engine, stream, blocks, tenants,
-                                    frontend, server, audit],
+@pytest.mark.parametrize("module", [engine, sampler, stream, blocks,
+                                    tenants, frontend, server, audit, pit],
                          ids=lambda m: m.__name__)
 def test_doctests_run_clean(module):
     results = doctest.testmod(module, verbose=False)

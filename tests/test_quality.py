@@ -103,6 +103,39 @@ def test_cross_battery_passes_thundering():
     assert rep["ok"], rep["tests"]
 
 
+def test_cross_battery_rejects_raw_lcg_through_pit():
+    """Pushing raw-LCG words through a distribution stage and back to
+    uniforms via the PIT must NOT launder the inter-stream correlation:
+    the PIT-reduced words still fail the cross-battery decisively."""
+    blk = battery._ablation_pit_block(777, 512, 64)
+    rep = cross.run_cross(np.ascontiguousarray(blk.T))
+    assert not rep["ok"]
+    assert not rep["tests"]["pairwise_sweep"]["ok"]
+
+
+def test_dist_pit_block_passes_cross_battery():
+    """The same PIT reduction applied to the real engine's exponential
+    draws keeps inter-stream independence (discrimination cuts one way)."""
+    blk = battery._dist_block(777, 512, 64, "exponential(1.5)", "ctr", "xla")
+    rep = cross.run_cross(np.ascontiguousarray(blk.T))
+    assert rep["ok"], rep["tests"]
+
+
+def test_pairwise_sweep_blocked_equals_unblocked():
+    """The blocked Gram path (full profile, S=2^14) must cover the same
+    pair set and agree with one unblocked Gram on the whole stream set
+    to BLAS rounding (GEMM accumulation order differs across tile
+    shapes, so exact bit-identity across block sizes is not promised)."""
+    rng = np.random.Generator(np.random.Philox(11))
+    streams = rng.integers(0, 2 ** 32, size=(64, 256), dtype=np.uint32)
+    whole = cross.pairwise_sweep(streams)            # one 64-row block
+    tiled = cross.pairwise_sweep(streams, block=16)  # 4x4 block triangle
+    assert tiled["max_abs_r"] == pytest.approx(whole["max_abs_r"],
+                                               rel=1e-12)
+    assert tiled["p"] == pytest.approx(whole["p"], rel=1e-9)
+    assert tiled["n_pairs"] == whole["n_pairs"] == 64 * 63 // 2
+
+
 def test_matrix_rank_detects_rank_deficiency():
     """The rank test is the battery's F2-linearity detector (Bakiri et
     al.): forcing one GF(2)-dependent row per 32x32 matrix (the
@@ -159,6 +192,23 @@ def test_committed_report_covers_acceptance_matrix(committed_report):
                      and not g["intra"]["tests"]["matrix_rank"]["ok"])
         cross_fail = g["cross"] is not None and not g["cross"]["ok"]
         assert rank_fail or cross_fail, g["name"]
+
+
+def test_committed_report_covers_distribution_stages(committed_report):
+    """Every distribution stage passes Crush-lite via the PIT on all
+    three backends, and the raw-LCG-through-PIT ablation still fails —
+    the reduction neither breaks good samplers nor launders bad bits."""
+    by_name = {g["name"]: g for g in committed_report["generators"]}
+    for spec in battery.DIST_SPECS:
+        dist = spec.split("(")[0].split("[")[0]
+        for backend in ("ref", "xla", "pallas"):
+            g = by_name[f"dist/{dist}/{backend}"]
+            assert g["ok"] and g["intra"]["ok"], g["name"]
+            assert g["sampler"] == spec
+    pit_g = by_name["ablation/raw_lcg_pit"]
+    assert not pit_g["ok"]
+    assert pit_g["cross"] is not None and not pit_g["cross"]["ok"]
+    assert pit_g["sampler"] == "exponential(1.0)"
 
 
 def test_committed_report_serialization_is_canonical(committed_report):
