@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke install-dev service service-smoke fleet fleet-smoke roofline roofline-full
+.PHONY: test test-fast bench bench-smoke install-dev service service-smoke fleet fleet-smoke roofline roofline-full inference inference-smoke
 
 install-dev:
 	$(PY) -m pip install -e ".[test]"
@@ -31,6 +31,21 @@ fleet:             ## 2-shard wire fleet (pipelined binary clients, coalescing+p
 
 fleet-smoke:       ## fleet bench rows (binary/json pair, hammer/unique/kill; fleet/* in BENCH_throughput.json)
 	$(PY) -m benchmarks.throughput fleet
+
+inference:         ## continuous batcher: fused/xla parity run, then kill-mid-run + journal replay, digest vs no-fault
+	rm -rf /tmp/repro-inference && mkdir -p /tmp/repro-inference
+	$(PY) -m repro.inference --batch 16 --vocab 256 --sequences 48 --rate 4 \
+	    --seed 7 --parity --digest-out /tmp/repro-inference/base.digest
+	-$(PY) -m repro.inference --batch 16 --vocab 256 --sequences 48 --rate 4 \
+	    --seed 7 --journal /tmp/repro-inference/journal.jsonl --fault-plan kill@40
+	$(PY) -m repro.inference --batch 16 --vocab 256 --sequences 48 --rate 4 \
+	    --seed 7 --journal /tmp/repro-inference/journal.jsonl \
+	    --digest-out /tmp/repro-inference/replay.digest
+	cmp /tmp/repro-inference/base.digest /tmp/repro-inference/replay.digest
+	@echo "inference: kill-mid-run replay digest == no-fault digest"
+
+inference-smoke:   ## inference bench rows (offline parity run + step micro; inference/* in BENCH_throughput.json)
+	$(PY) -m benchmarks.throughput inference
 
 roofline:          ## roofline smoke + regression gate (merges roofline/* rows, fails if fused/donated regress)
 	$(PY) -m benchmarks.roofline --check

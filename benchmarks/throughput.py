@@ -628,6 +628,115 @@ def fleet_smoke(out=print, records=None, *, burst: int = 96,
         "(bit-identical, pools+coalescing+pipelining on)")
 
 
+def inference_smoke(out=print, records=None, *, batch: int = 64,
+                    vocab: int = 512, sequences: int = 96,
+                    rate: float = 8.0, max_steps: int = 400) -> None:
+    """Continuous-batching serving rows: tokens/s, slot occupancy,
+    p50/p99 per-token latency, calls/step — plus a fused-vs-two-pass
+    step-kernel microbenchmark (the HBM-noise-block round trip the
+    fused gumbel-max kernel deletes).
+
+    The offline run executes with ``--parity`` semantics (the fused
+    run's transcript digest is asserted against an xla two-pass re-run)
+    so every benchmark invocation is also a correctness check.
+    """
+    import time as _time
+
+    from repro.core import u64
+    from repro.inference import (GumbelMaxSampler, SamplingSpec,
+                                 ScheduleConfig, run_offline)
+
+    cfg = ScheduleConfig(capacity=batch, vocab=vocab, sequences=sequences,
+                         rate=rate, seed=29, max_steps=max_steps)
+    report = run_offline(cfg, parity=True)      # raises on digest mismatch
+    j = report.to_json()
+    out(row(f"inference/offline/b={batch}", j["p50_ms"] * 1e3,
+            f"{j['tokens_per_s']:.0f} tok/s occ={j['occupancy']:.2f} "
+            f"p99={j['p99_ms']:.1f}ms "
+            f"{j['calls_per_step']:.2f} calls/step (parity ok)"))
+    _record(records, name=f"inference/offline/b={batch}",
+            backend="inference", sampler="gumbel", dtype="float32",
+            variant="continuous-batching", num_streams=batch,
+            num_steps=j["decode_steps"], us_per_call=j["p50_ms"] * 1e3,
+            gsamples_per_s=j["tokens_per_s"] / 1e9,
+            tokens_per_s=j["tokens_per_s"], occupancy=j["occupancy"],
+            latency_p50_ms=j["p50_ms"], latency_p99_ms=j["p99_ms"],
+            calls_per_step=j["calls_per_step"],
+            parity_checked=j["parity_digest"] is not None)
+
+    # step-kernel micro, three variants of the same step (tokens equal):
+    #   twopass — noise block materialized by one jitted call, reduced by
+    #             a second (crosses the jit boundary = HBM round trip);
+    #   onepass — the xla path, noise + reduce in ONE executable;
+    #   fused   — the Pallas kernel, bits -> token ids in-kernel (runs
+    #             interpreted off-TPU, so its CPU timing is informational).
+    s = GumbelMaxSampler.standalone(seed=29, vocab=vocab, capacity=batch,
+                                    spec=SamplingSpec(temperature=0.8))
+    from repro.inference.kernels import twopass_argmax
+    purpose = s.service.channel(s.channel).purpose
+    x0, h_fam = engine.family_from_seed(s.service.seed, purpose)
+    inv_temp = s.spec.inv_temp
+
+    @jax.jit
+    def _noise(tag_hi, tag_lo, c_hi, c_lo):
+        h = engine.derive_leaf(
+            (jnp.broadcast_to(jnp.asarray(h_fam[0]), tag_hi.shape),
+             jnp.broadcast_to(jnp.asarray(h_fam[1]), tag_lo.shape)),
+            (tag_hi, tag_lo))
+        plan = engine.GenPlan(x0=x0, h=h, num_steps=vocab,
+                              ctr=(c_hi, c_lo), offset=None, mode="ctr",
+                              deco=s.deco, sampler="gumbel",
+                              out_dtype="float32")
+        return engine.generate(plan, backend="xla",
+                               block_t=s.service.block_t,
+                               block_s=s.service.block_s)
+
+    @jax.jit
+    def _reduce(lg, noise):
+        lt = lg.astype(jnp.float32).T
+        thresh = jnp.full((batch,), -jnp.inf, jnp.float32)
+        return twopass_argmax(lt, noise, thresh, inv_temp=inv_temp)
+
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(batch, vocab)).astype(np.float32))
+    tags = jnp.arange(batch, dtype=jnp.uint32)
+    c = tuple(map(jnp.asarray, u64.const64(0)))
+    args = (logits, jnp.zeros_like(tags), tags, c[0], c[1])
+
+    def two_pass():
+        return _reduce(logits, _noise(*args[1:]))
+
+    got = {"fused": np.asarray(s.jitted("fused")(*args)),
+           "onepass": np.asarray(s.jitted("xla")(*args)),
+           "twopass": np.asarray(two_pass())}
+    assert np.array_equal(got["fused"], got["onepass"]) and \
+        np.array_equal(got["onepass"], got["twopass"]), \
+        "step-micro token mismatch across fused/onepass/twopass"
+    t_fused = time_fn_stats(lambda: s.jitted("fused")(*args), iters=30)
+    t_one = time_fn_stats(lambda: s.jitted("xla")(*args), iters=30)
+    t_two = time_fn_stats(two_pass, iters=30)
+    sp = {"fused": t_two["us_per_call"] / t_fused["us_per_call"],
+          "onepass": t_two["us_per_call"] / t_one["us_per_call"],
+          "twopass": 1.0}
+    best = max(sp["fused"], sp["onepass"])
+    tok = batch / (t_one["us_per_call"] * 1e-6)
+    out(row(f"inference/step/b={batch}", t_one["us_per_call"],
+            f"onepass {tok / 1e6:.2f} Mtok/s, {sp['onepass']:.2f}x vs "
+            f"two-pass (pallas {sp['fused']:.2f}x"
+            f"{', interpreted' if engine.use_interpret() else ''}; "
+            f"parity-asserted)"))
+    for variant, t in (("fused", t_fused), ("onepass", t_one),
+                       ("twopass", t_two)):
+        _record(records, name=f"inference/step/b={batch}",
+                backend="inference", sampler="gumbel", dtype="float32",
+                variant=variant, num_streams=batch, num_steps=vocab,
+                us_per_call=t["us_per_call"], compile_us=t["compile_us"],
+                gsamples_per_s=batch / (t["us_per_call"] * 1e-6) / 1e9,
+                fused_speedup=sp[variant], best_fused_speedup=best,
+                interpreted=bool(engine.use_interpret())
+                            and variant == "fused")
+
+
 SMOKES = {
     "smoke": smoke,
     "sampler": sampler_smoke,
@@ -635,6 +744,7 @@ SMOKES = {
     "pipelined": pipelined_smoke,
     "service": service_smoke,
     "fleet": fleet_smoke,
+    "inference": inference_smoke,
 }
 
 

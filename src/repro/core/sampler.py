@@ -40,6 +40,13 @@ software answer to hardware programmable-PRNG statistics):
                       host and the count is the number of thresholds at
                       or below u — one compare+add per ladder rung, no
                       transcendentals at runtime, bit-exact everywhere.
+  "gumbel"            standard Gumbel by double-log inversion,
+                      -log(-log(u)) with u clamped to TINY_F32, so both
+                      logs see strictly positive arguments.  This is the
+                      gumbel-max trick's perturbation: adding a gumbel
+                      block to logits and taking the argmax samples the
+                      softmax — the inference tier's in-kernel
+                      bits-to-token stage (``repro.inference``).
   "gamma(k)"          Gamma(shape k >= 1, scale 1) via Marsaglia-Tsang:
                       each element gets GAMMA_RETRY_ROWS candidate
                       (normal, acceptance-uniform) draws derived from
@@ -48,6 +55,10 @@ software answer to hardware programmable-PRNG statistics):
                       rejection in-kernel and the first accepted
                       candidate wins.  P(all rejected) < 0.05**6.
                       k == 1 short-circuits to the exact Exp(1) path.
+  "gamma(k,theta)"    two-parameter sugar: the gamma(k) stage scaled by
+                      theta > 0 — one extra multiply against a host-
+                      rounded f32 constant, the final op of the stage
+                      (it feeds no add, so no fma_guard is needed).
   "categorical[...]"  draw from weights "categorical[w0,w1,...]" via a
                       packed Walker/Vose alias table: bin = floor(u*K),
                       flip u' < thresh[bin] picks bin or alias[bin].
@@ -81,15 +92,17 @@ from repro.core.u64 import U32, U64Pair
 TINY_F32 = np.float32(1.1754944e-38)
 TWO_PI_F32 = np.float32(2.0 * np.pi)
 
-# Param slot: None (bits/uniform/normal), a float (bernoulli/exponential/
-# poisson/gamma) or a tuple of floats (categorical weights).  Always
-# hashable — specs key functools.partial kernels and jit caches.
+# Param slot: None (bits/uniform/normal/gumbel), a float (bernoulli/
+# exponential/poisson/gamma) or a tuple of floats (categorical weights;
+# gamma's two-parameter (shape, scale) form).  Always hashable — specs
+# key functools.partial kernels and jit caches.
 SamplerSpec = Tuple[str, Optional[object]]
 
 #: The full sampler spec grammar, quoted verbatim by parse() errors.
 SPEC_GRAMMAR = (
-    "'bits' | 'uniform' | 'normal' | 'bernoulli(p)' | 'exponential(rate)' "
-    "| 'poisson(rate)' | 'gamma(shape)' | 'categorical[w0,w1,...]'")
+    "'bits' | 'uniform' | 'normal' | 'gumbel' | 'bernoulli(p)' | "
+    "'exponential(rate)' | 'poisson(rate)' | 'gamma(shape[,scale])' "
+    "| 'categorical[w0,w1,...]'")
 
 _SCALAR_RE = re.compile(
     r"^(bernoulli|exponential|poisson|gamma)\(([^)]*)\)$")
@@ -127,13 +140,26 @@ def parse(spec: str) -> SamplerSpec:
     ('poisson', 3.5)
     >>> parse("categorical[1, 1, 2]")
     ('categorical', (1.0, 1.0, 2.0))
+    >>> parse("gamma(2.5, 0.5)")
+    ('gamma', (2.5, 0.5))
     >>> parse("gamma")                 # doctest: +IGNORE_EXCEPTION_DETAIL
     Traceback (most recent call last):
     ValueError: unknown sampler 'gamma'; grammar: ...
     """
-    if spec in ("bits", "uniform", "normal"):
+    if spec in ("bits", "uniform", "normal", "gumbel"):
         return (spec, None)
     m = _SCALAR_RE.match(spec)
+    if m and m.group(1) == "gamma" and "," in m.group(2):
+        k_text, _, th_text = m.group(2).partition(",")
+        k = _parse_float("gamma", k_text.strip())
+        theta = _parse_float("gamma", th_text.strip())
+        if k < 1.0:
+            raise ValueError(
+                f"gamma shape must be >= 1 (Marsaglia-Tsang squeeze "
+                f"needs no boost draw), got {k!r}")
+        if theta <= 0.0:
+            raise ValueError(f"gamma scale must be > 0, got {theta!r}")
+        return ("gamma", (k, theta))
     if m:
         kind, p = m.group(1), _parse_float(m.group(1), m.group(2))
         if kind == "exponential" and p <= 0.0:
@@ -163,7 +189,8 @@ def parse(spec: str) -> SamplerSpec:
 
 
 #: Spec kinds whose outputs are float-coded (see result_dtype).
-DISTRIBUTION_KINDS = ("exponential", "poisson", "gamma", "categorical")
+DISTRIBUTION_KINDS = ("exponential", "poisson", "gamma", "categorical",
+                      "gumbel")
 
 
 def result_dtype(spec: SamplerSpec, out_dtype: str = "float32"):
@@ -283,6 +310,23 @@ def exponential_from_bits(bits: jnp.ndarray, rate: float) -> jnp.ndarray:
     """
     u = uniform_from_bits(bits)
     return -jnp.log(np.float32(1.0) - u) * np.float32(1.0 / float(rate))
+
+
+def gumbel_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Standard Gumbel float32 by double-log inversion, -log(-log(u)).
+
+    ``u`` is clamped to the smallest positive normal float32 before the
+    inner log (so it is finite) and the largest representable uniform is
+    1 - 2**-24 (so the inner log is strictly negative and the outer log
+    sees a positive argument): both logs are open-interval safe without
+    the ad-hoc ``+ 1e-20`` epsilons of naive implementations.  The range
+    is [-log(log(2**24)), log(-log(TINY_F32))] ~ [-2.81, 4.47] on the
+    low side and ~16.6 at u -> TINY, all finite.  No products feed adds,
+    so the transform needs no fma_guard and is bit-identical across
+    batch shapes on a backend.
+    """
+    u = uniform_from_bits(bits)
+    return -jnp.log(-jnp.log(jnp.maximum(u, TINY_F32)))
 
 
 def poisson_thresholds(rate: float) -> Tuple[float, ...]:
@@ -488,8 +532,15 @@ def apply(bits: jnp.ndarray, spec: SamplerSpec, out_dtype: str = "float32",
             for t in poisson_thresholds(p):
                 x = x + (u >= np.float32(t)).astype(jnp.float32)
         elif kind == "gamma":
-            x = exponential_from_bits(bits, 1.0) if p == 1.0 \
-                else gamma_from_bits(bits, p)
+            shape, scale = p if isinstance(p, tuple) else (p, None)
+            x = exponential_from_bits(bits, 1.0) if shape == 1.0 \
+                else gamma_from_bits(bits, shape)
+            if scale is not None and scale != 1.0:
+                # pure scale multiply: the stage's final op, feeding no
+                # add — contraction-safe without a guard
+                x = x * np.float32(scale)
+        elif kind == "gumbel":
+            x = gumbel_from_bits(bits)
         else:
             x = categorical_from_bits(bits, p)
         dtype = result_dtype(spec, out_dtype)

@@ -1,0 +1,28 @@
+"""Continuous-batching inference tier: slot-based decode serving with
+in-kernel bits-to-token sampling.
+
+The seventh layer — above ``service`` — turning the randomness service
+into a token-serving consumer:
+
+  * ``kernels``   — the fused gumbel-max Pallas kernel (counter bits ->
+    token ids in one pallas_call) and its two-pass oracle;
+  * ``sampling``  — :class:`GumbelMaxSampler`: one leased counter
+    window + one engine call per decode step, journaled;
+  * ``slots``     — :class:`SlotPool`: live sequences as tenants,
+    slot churn as deterministic region retire-and-reuse;
+  * ``scheduler`` — :class:`ContinuousBatcher`: Poisson arrivals from
+    the service's own ``exponential`` stage, admission, per-step churn;
+  * ``harness``   — the offline benchmark + crash-replay CLI
+    (``python -m repro.inference``).
+
+See ``docs/inference.md`` for the slot lifecycle, the kernel contract,
+and the latency methodology.
+"""
+from repro.inference.sampling import (ActiveSeq, GumbelMaxSampler,  # noqa: F401
+                                      SamplingSpec)
+from repro.inference.slots import Sequence, SlotPool  # noqa: F401
+from repro.inference.scheduler import (ContinuousBatcher,  # noqa: F401
+                                       ScheduleConfig, RunResult,
+                                       SyntheticLogitModel,
+                                       transcript_digest)
+from repro.inference.harness import OfflineReport, run_offline  # noqa: F401

@@ -1,0 +1,4 @@
+"""CLI entry: ``python -m repro.inference`` (see harness.main)."""
+from repro.inference.harness import main
+
+raise SystemExit(main())

@@ -1,0 +1,3 @@
+"""Inference-tier Pallas kernels (bits -> sampled token ids)."""
+from repro.inference.kernels.gumbel_argmax import (  # noqa: F401
+    argmax_first, fused_argmax, gumbel_scores, twopass_argmax)

@@ -1,0 +1,218 @@
+"""Fused gumbel-max token sampling: ONE pallas_call from counter bits to
+token ids.
+
+The gumbel-max trick samples ``softmax(logits / temperature)`` by adding
+independent standard-Gumbel noise to the scaled logits and taking the
+argmax.  A two-pass implementation materializes the ``(vocab, batch)``
+noise block in HBM and then reduces it against the logits — at decode
+batch sizes that noise block is the largest tensor the sampler touches.
+This kernel fuses the whole chain instead:
+
+  counter bits (ThundeRiNG ctr mode, one leaf tag per live sequence)
+    -> u = top-24-bit uniform
+    -> g = -log(-log(u))                (the grammar's "gumbel" stage)
+    -> score = fma_guard(logit * inv_temp) + g, top-k mask
+    -> running (max, argmax) over vocab tiles
+    -> (batch,) int32 token ids
+
+per tile in VMEM, so neither the uint32 bit block nor the f32 noise
+block ever reaches HBM (jaxpr-asserted in tests/test_inference.py).
+
+Layout: scores live ``(vocab, batch)`` — vocab on sublanes, sequences on
+lanes — because that is the generation layout (counters advance along
+the T axis = vocab, leaf tags select the S axis = sequences), so the
+bits are consumed exactly where they are produced, with no in-kernel
+transpose.  Callers pass logits already transposed.
+
+The grid is ``(batch_tiles, vocab_tiles)`` with vocab minor: each batch
+tile's ``(1, bs)`` output block is revisited across the vocab tiles
+while the running best value/index carries in VMEM scratch, and the
+token ids are written once on the last vocab tile.
+
+Tie-breaking matches ``jnp.argmax`` (first index wins): within a tile
+the argmax is the *minimum* row index attaining the tile max (a
+Mosaic-safe where+min reduction, no 1-D iota), and across tiles a later
+tile only takes over on a STRICTLY greater max.
+
+Bit-exactness contract (shared with the two-pass oracle below): both
+paths run the identical elementwise chain — ``sampler.gumbel_from_bits``
+on engine-identical bits, the ``fma_guard``-pinned logit scaling, the
+same masked first-argmax — so scores agree bit-for-bit at tile-multiple
+shapes and to the usual few-ULP libm slack at padded tiles; token
+parity additionally requires no two scores within that slack of the
+column max, which fixed-seed tests assert empirically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import numpy as np
+
+from repro.core import sampler as sampler_mod
+
+DEFAULT_BLOCK_V = 512     # vocab (sublane) tile
+DEFAULT_BLOCK_B = 256     # batch (lane) tile
+
+_NEG_INF = np.float32(-np.inf)
+_I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+def gumbel_scores(bits: jnp.ndarray, logits: jnp.ndarray,
+                  inv_temp: np.float32) -> jnp.ndarray:
+    """Perturbed scores: ``fma_guard(logits * inv_temp) + gumbel(bits)``.
+
+    The ONE scoring transform shared by the fused kernel body and the
+    two-pass oracle — sharing it (like ``sampler.apply`` across the
+    engine backends) is what makes the parity check a statement about
+    the kernel's dataflow rather than about two re-implementations.
+    ``fma_guard`` pins the scaled logit before the add so XLA:CPU cannot
+    contract it shape-dependently (see ``repro.core.sampler``).
+    """
+    g = sampler_mod.gumbel_from_bits(bits)
+    return sampler_mod.fma_guard(logits * inv_temp) + g
+
+
+def argmax_first(scores: jnp.ndarray) -> jnp.ndarray:
+    """Column-wise argmax over axis 0, FIRST max index wins — (B,) int32.
+
+    Expressed as max + (where, min-iota) instead of ``jnp.argmax`` so
+    the identical reduction runs inside the Pallas kernel body (Mosaic
+    has no native argmax; ``broadcasted_iota`` is its 2-D-safe iota).
+    """
+    m = jnp.max(scores, axis=0, keepdims=True)
+    row = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    return jnp.min(jnp.where(scores == m, row, _I32_MAX), axis=0)
+
+
+def _masked(scores: jnp.ndarray, logits: jnp.ndarray,
+            thresh: jnp.ndarray) -> jnp.ndarray:
+    """Top-k mask: tokens whose LOGIT is below the per-sequence k-th
+    largest logit can never win (-inf score).  Thresholding on raw
+    logits (not scores) keeps the kept set independent of the noise —
+    the standard top-k-then-sample semantics."""
+    return jnp.where(logits >= thresh, scores, _NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel
+# ---------------------------------------------------------------------------
+
+def _gumbel_argmax_kernel(logits_ref, root_hi_ref, root_lo_ref,
+                          ctr_hi_ref, ctr_lo_ref, h_hi_ref, h_lo_ref,
+                          thresh_ref, o_ref, best_ref, besti_ref, *,
+                          inv_temp: np.float32, deco: str, block_v: int,
+                          n_v_tiles: int):
+    j = pl.program_id(1)               # vocab tile (minor -> o_ref revisit)
+
+    @pl.when(j == 0)
+    def _init():
+        best_ref[...] = jnp.full(best_ref.shape, _NEG_INF, jnp.float32)
+        besti_ref[...] = jnp.zeros(besti_ref.shape, jnp.int32)
+
+    rh, rl = root_hi_ref[...], root_lo_ref[...]          # (bv, 1)
+    ch, cl = ctr_hi_ref[...], ctr_lo_ref[...]            # (bv, 1)
+    hh, hl = h_hi_ref[...], h_lo_ref[...]                # (1, bb)
+    logits = logits_ref[...]                             # (bv, bb)
+    bits = sampler_mod.ctr_bits((rh, rl), (ch, cl), (hh, hl), deco=deco)
+    score = _masked(gumbel_scores(bits, logits, inv_temp), logits,
+                    thresh_ref[...])
+
+    tile_max = jnp.max(score, axis=0, keepdims=True)     # (1, bb)
+    row = (jax.lax.broadcasted_iota(jnp.int32, score.shape, 0)
+           + j * block_v)                                # global vocab index
+    tile_arg = jnp.min(jnp.where(score == tile_max, row, _I32_MAX),
+                       axis=0, keepdims=True)
+    # strictly-greater carry: ties resolve to the earlier (lower-index)
+    # tile, matching argmax_first over the full column
+    take = tile_max > best_ref[...]
+    besti_ref[...] = jnp.where(take, tile_arg, besti_ref[...])
+    best_ref[...] = jnp.where(take, tile_max, best_ref[...])
+
+    @pl.when(j == n_v_tiles - 1)
+    def _emit():
+        o_ref[...] = besti_ref[...]
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def fused_argmax(logits_t: jnp.ndarray, h, roots, ctr_rows,
+                 thresh: jnp.ndarray, *, inv_temp: np.float32,
+                 deco: str = "splitmix64", block_v: int = DEFAULT_BLOCK_V,
+                 block_b: int = DEFAULT_BLOCK_B,
+                 interpret: bool = False) -> jnp.ndarray:
+    """(B,) int32 sampled tokens from (V, B) transposed logits — one
+    pallas_call, no noise/bit block in HBM.
+
+    logits_t: (V, B) float32 (vocab-major).  h: ((B,), (B,)) u32 leaf
+    offsets — one PER SEQUENCE (each live sequence is a tenant; its tag
+    selects its independent stream).  roots / ctr_rows: ((V,), (V,)) u32
+    per-vocab-row root states and counters for this decode step's
+    counter window (``engine.root_and_ctr_rows``).  thresh: (B,) f32
+    per-sequence top-k logit threshold (-inf disables masking).
+    """
+    V, B = logits_t.shape
+    bv = min(block_v, _pad_to(V, 8))
+    bv = max(8, bv - bv % 8)
+    bb = min(block_b, _pad_to(B, 128))
+    Vp, Bp = _pad_to(V, bv), _pad_to(B, bb)
+
+    # vocab padding loses by construction: -inf logits either fail the
+    # top-k compare (thresh finite) or score fma_guard(-inf)+g ~ -1e30;
+    # batch padding (+inf thresh -> all-masked column) yields token 0,
+    # sliced off below.
+    lt = jnp.pad(logits_t.astype(jnp.float32), ((0, Vp - V), (0, Bp - B)),
+                 constant_values=_NEG_INF)
+    th = jnp.pad(thresh.astype(jnp.float32), (0, Bp - B),
+                 constant_values=np.float32(np.inf)).reshape(1, Bp)
+
+    def pad_col(v):  # (V,) -> (Vp, 1)
+        return jnp.pad(v, (0, Vp - V)).reshape(Vp, 1)
+
+    def pad_row(v):  # (B,) -> (1, Bp)
+        return jnp.pad(v, (0, Bp - B)).reshape(1, Bp)
+
+    n_v = Vp // bv
+    col = pl.BlockSpec((bv, 1), lambda i, j: (j, 0))
+    lane = pl.BlockSpec((1, bb), lambda i, j: (0, i))
+    out = pl.pallas_call(
+        functools.partial(_gumbel_argmax_kernel, inv_temp=inv_temp,
+                          deco=deco, block_v=bv, n_v_tiles=n_v),
+        grid=(Bp // bb, n_v),
+        in_specs=[pl.BlockSpec((bv, bb), lambda i, j: (j, i)),
+                  col, col, col, col, lane, lane, lane],
+        out_specs=pl.BlockSpec((1, bb), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Bp), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, bb), jnp.float32),
+                        pltpu.VMEM((1, bb), jnp.int32)],
+        interpret=interpret,
+    )(lt, pad_col(roots[0]), pad_col(roots[1]),
+      pad_col(ctr_rows[0]), pad_col(ctr_rows[1]),
+      pad_row(h[0]), pad_row(h[1]), th)
+    return out[0, :B]
+
+
+# ---------------------------------------------------------------------------
+# Two-pass oracle
+# ---------------------------------------------------------------------------
+
+def twopass_argmax(logits_t: jnp.ndarray, noise: jnp.ndarray,
+                   thresh: jnp.ndarray, *,
+                   inv_temp: np.float32) -> jnp.ndarray:
+    """(B,) int32 tokens from a MATERIALIZED (V, B) gumbel noise block.
+
+    The reference the fused kernel is checked against: ``noise`` comes
+    from ``engine.generate`` with the ``"gumbel"`` sampler stage on the
+    ref/xla backend (bit-identical bits by the engine's parity tests),
+    and the scoring/masking/argmax here reuses the kernel's own helpers,
+    so fused-vs-two-pass disagreement isolates the kernel's tiling —
+    not the math.
+    """
+    logits_t = logits_t.astype(jnp.float32)
+    score = sampler_mod.fma_guard(logits_t * inv_temp) + noise
+    return argmax_first(_masked(score, logits_t, thresh.reshape(1, -1)))

@@ -1,0 +1,256 @@
+"""Token sampling over leased counter windows: the decode tier's ONE
+randomness consumer.
+
+``GumbelMaxSampler`` turns a ``(capacity, vocab)`` logit block into
+``(capacity,)`` token ids, drawing all of a decode step's randomness
+from ONE leased counter window of one per-class channel — the
+continuous batcher's "one coalesced per-class request per decode step"
+contract, metered here as ``engine_calls / steps`` (the CI gate).
+
+Per decode step ``d`` the sampler consumes window
+``[d * vocab, (d+1) * vocab)`` of its class channel; each live
+sequence's noise column is the engine leaf at the sequence-tenant's
+region tag.  The (channel, window, tags) triple is journaled per step
+as an atomic batch record — ``repro.service.audit`` can regenerate any
+sequence's per-step noise from the record alone, and a restarted run
+replays journaled steps through ``lease-or-regenerate``: an explicit
+``lease(at=d * vocab)`` that collides with a restored (fenced) window
+is the replay signal, and the step regenerates bit-identically instead
+of double-spending counters.
+
+Sampling paths (all bit-compatible on real entries):
+
+  * ``"fused"``  — the Pallas kernel (``inference.kernels``): one
+    pallas_call, bits -> token ids, nothing intermediate in HBM.
+  * ``"xla"`` / ``"ref"`` — the two-pass oracle: engine-generated
+    ``"gumbel"`` noise block + the same masked first-argmax.
+
+Greedy decode (``temperature <= 0``) takes the pure argmax and consumes
+NO randomness — no lease, no journal record, zero engine calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, u64
+from repro.inference import kernels as kern
+from repro.runtime import blocks
+from repro.service import frontend, tenants
+
+PATHS = ("fused", "xla", "ref")
+
+
+def class_channel(sampler: str = "gumbel",
+                  out_dtype: str = "float32") -> str:
+    """Channel name for one inference sampling class (cf.
+    ``service.frontend.class_channel`` — same convention, own prefix)."""
+    return f"inference/class/{sampler}/{out_dtype}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingSpec:
+    """Host-side sampling parameters (compile-time, not per-step).
+
+    ``temperature <= 0`` means greedy argmax (no randomness).
+    ``top_k == 0`` disables the top-k filter; ``top_k = k`` keeps the k
+    largest logits per sequence.  ``inv_temp`` is rounded once to f32 on
+    the host so every backend scales by the identical constant.
+    """
+    temperature: float = 1.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    @property
+    def inv_temp(self) -> np.float32:
+        return np.float32(1.0 / float(self.temperature))
+
+
+@dataclasses.dataclass(frozen=True)
+class ActiveSeq:
+    """One live sequence's view of a decode step (slot pool row)."""
+    slot: int           # slot index = logits row = noise column
+    seq_id: str
+    tenant_id: str
+    tag: int            # absolute leaf tag (tenant region slot 0)
+    position: int       # tokens generated so far = decode position
+
+    @property
+    def rid(self) -> str:
+        return f"{self.seq_id}/t{self.position:06d}"
+
+
+class GumbelMaxSampler:
+    """Slot-batched gumbel-max token sampler over a BlockService channel.
+
+    One instance serves a fixed ``(capacity, vocab)`` decode shape; the
+    per-step executable is jitted once per path with TRACED tags and
+    counter, so slot churn (different tag vectors every step) never
+    retraces.
+    """
+
+    def __init__(self, service: blocks.BlockService,
+                 registry: Optional[tenants.TenantRegistry] = None, *,
+                 vocab: int, capacity: int,
+                 spec: SamplingSpec = SamplingSpec(),
+                 path: str = "fused", journal=None,
+                 channel: Optional[str] = None,
+                 deco: str = "splitmix64"):
+        if path not in PATHS:
+            raise ValueError(f"unknown sampling path {path!r}; have {PATHS}")
+        if vocab < 1 or capacity < 1:
+            raise ValueError(f"need vocab >= 1 and capacity >= 1, got "
+                             f"vocab={vocab} capacity={capacity}")
+        if spec.top_k > vocab:
+            raise ValueError(f"top_k={spec.top_k} exceeds vocab={vocab}")
+        self.service = service
+        self.registry = registry
+        self.vocab = int(vocab)
+        self.capacity = int(capacity)
+        self.spec = spec
+        self.path = path
+        self.journal = journal
+        self.deco = deco
+        self.channel = channel or class_channel()
+        service.open(self.channel, num_streams=capacity, sampler="gumbel",
+                     out_dtype="float32", deco=deco)
+        self.steps = 0
+        self.engine_calls = 0
+        self.replayed_steps = 0
+        self._jitted: Dict[str, Callable] = {}
+        self._greedy_fn = jax.jit(
+            lambda l: jnp.argmax(l, -1).astype(jnp.int32))
+
+    @classmethod
+    def standalone(cls, *, seed: int, vocab: int, capacity: int,
+                   spec: SamplingSpec = SamplingSpec(),
+                   path: str = "fused", journal=None) -> "GumbelMaxSampler":
+        """Self-contained sampler over a fresh BlockService + registry
+        (the thin-client entry ``launch/serve.py`` uses)."""
+        return cls(blocks.BlockService(seed=seed),
+                   tenants.TenantRegistry(), vocab=vocab,
+                   capacity=capacity, spec=spec, path=path, journal=journal)
+
+    # -- per-path executables ---------------------------------------------
+
+    def jitted(self, path: Optional[str] = None) -> Callable:
+        """The jitted step function for ``path`` (tests introspect the
+        fused path's jaxpr through this)."""
+        path = path or self.path
+        fn = self._jitted.get(path)
+        if fn is None:
+            fn = self._build(path)
+            self._jitted[path] = fn
+        return fn
+
+    def _build(self, path: str) -> Callable:
+        V, B = self.vocab, self.capacity
+        purpose = self.service.channel(self.channel).purpose
+        x0, h_fam = engine.family_from_seed(self.service.seed, purpose)
+        inv_temp = self.spec.inv_temp
+        top_k = int(self.spec.top_k)
+        deco = self.deco
+        block_t, block_s = self.service.block_t, self.service.block_s
+
+        def fn(logits, tag_hi, tag_lo, ctr_hi, ctr_lo):
+            lf = logits.astype(jnp.float32).reshape(B, V)
+            if top_k > 0:
+                thresh = jax.lax.top_k(lf, top_k)[0][:, -1]
+            else:
+                thresh = jnp.full((B,), -jnp.inf, jnp.float32)
+            h = engine.derive_leaf(
+                (jnp.broadcast_to(jnp.asarray(h_fam[0]), tag_hi.shape),
+                 jnp.broadcast_to(jnp.asarray(h_fam[1]), tag_lo.shape)),
+                (tag_hi, tag_lo))
+            lt = lf.T                                    # (V, B) vocab-major
+            if path == "fused":
+                roots, ctr_rows = engine.root_and_ctr_rows(
+                    x0, (ctr_hi, ctr_lo), V)
+                return kern.fused_argmax(
+                    lt, h, roots, ctr_rows, thresh, inv_temp=inv_temp,
+                    deco=deco, block_v=block_t, block_b=block_s,
+                    interpret=engine.use_interpret())
+            plan = engine.GenPlan(
+                x0=x0, h=h, num_steps=V, ctr=(ctr_hi, ctr_lo), offset=None,
+                mode="ctr", deco=deco, sampler="gumbel",
+                out_dtype="float32")
+            noise = engine.generate(plan, backend=path, block_t=block_t,
+                                    block_s=block_s)
+            return kern.twopass_argmax(lt, noise, thresh,
+                                       inv_temp=inv_temp)
+
+        return jax.jit(fn)
+
+    # -- the decode step ---------------------------------------------------
+
+    def sample_step(self, step: int, logits,
+                    active: Sequence[ActiveSeq] = ()) -> np.ndarray:
+        """(capacity,) int32 tokens for decode step ``step``.
+
+        ``logits``: (capacity, vocab) — inactive slots' rows are ignored
+        (their tokens are garbage; callers only read active slots).
+        ``active``: the live sequences; their tags select the noise
+        columns, their rids label the journal record.
+        """
+        self.steps += 1
+        if self.spec.greedy:
+            # pure argmax: consumes no randomness, journals nothing
+            return np.asarray(self._greedy_fn(jnp.asarray(logits)))
+
+        V = self.vocab
+        lo = step * V
+        lease = None
+        try:
+            lease = self.service.lease(self.channel, V, at=lo)
+        except blocks.LeaseError:
+            pass  # journaled window from a previous owner: regenerate
+
+        tags = np.zeros(self.capacity, dtype=np.uint64)
+        for a in active:
+            tags[a.slot] = np.uint64(a.tag)
+        c_hi, c_lo = u64.const64(lo)
+        toks = self.jitted(self.path)(
+            jnp.asarray(logits),
+            jnp.asarray((tags >> np.uint64(32)).astype(np.uint32)),
+            jnp.asarray(tags.astype(np.uint32)),
+            jnp.asarray(c_hi), jnp.asarray(c_lo))
+        self.engine_calls += 1
+        toks = np.asarray(toks)
+
+        if self.registry is not None:
+            for a in active:
+                self.registry.charge(a.tenant_id, V)
+        if lease is not None:
+            lease.commit()
+            if self.journal is not None:
+                assignments = [frontend.Assignment(
+                    rid=a.rid, tenant_id=a.tenant_id, sampler="gumbel",
+                    out_dtype="float32", shape=(V,), channel=self.channel,
+                    lo=lo, rows=V, tags=(a.tag,), deco=self.deco)
+                    for a in active]
+                self.journal.append_batch(
+                    assignments, [(self.channel, lo, lo + V)])
+                self.journal.flush()
+        else:
+            self.replayed_steps += 1
+        return toks
+
+    def stats(self) -> Dict[str, float]:
+        steps = max(1, self.steps)
+        return {"steps": self.steps,
+                "engine_calls": self.engine_calls,
+                "replayed_steps": self.replayed_steps,
+                "calls_per_step": self.engine_calls / steps,
+                "path": self.path,
+                "greedy": self.spec.greedy}

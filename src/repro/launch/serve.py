@@ -1,12 +1,13 @@
 """Batched serving driver: prefill a batch of prompts, then step-decode.
 
-Sampling randomness comes from the randomness-as-a-service layer: with
-``temperature > 0`` the server is RandService's first in-process client
-— each decode step requests a ``(batch, vocab)`` uniform block for the
-``launch/serve`` tenant and samples by gumbel-max.  Every draw is
-therefore tenant-attributed, quota-metered, ledger-fenced and (with a
-journal) replayable to bit-identical tokens; the token sampler shares
-its generation substrate with every other tenant of the service.
+Token sampling is delegated to the inference tier
+(``repro.inference.GumbelMaxSampler``): each decode row is a tenant
+sequence (``launch/serve/seq/<b>``), and with ``temperature > 0`` every
+decode step draws its gumbel noise from ONE leased counter window of a
+standalone sampler service — tenant-attributed, ledger-fenced, and
+(through the fused path) sampled in-kernel from counter bits to token
+ids without a noise block in HBM.  ``temperature 0`` stays the pure
+greedy argmax and consumes no randomness at all.
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke \\
       --batch 4 --prompt-len 32 --gen 16 --temperature 0.8
@@ -21,27 +22,53 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.data import SyntheticLMPipeline
 from repro.launch.train import pipeline_for, smoke_config
 from repro.models import registry
-from repro.service import RandServer, ServerConfig
+from repro.inference import ActiveSeq, GumbelMaxSampler, SamplingSpec
 
 SAMPLER_TENANT = "launch/serve"
 
 
-def _pick(logits, rand: RandServer, temperature: float):
-    """Greedy at temperature 0; else gumbel-max over one service request."""
-    if temperature <= 0.0 or rand is None:
-        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    u = rand.request(SAMPLER_TENANT, logits.shape, sampler="uniform")
-    tiny = np.float32(1e-20)
-    g = -np.log(-np.log(u + tiny) + tiny)
-    tok = jnp.argmax(logits.astype(jnp.float32) / temperature + g, -1)
-    return tok[:, None].astype(jnp.int32)
+class TokenPicker:
+    """Per-step token selection over the inference tier's sampler.
+
+    Greedy (``temperature <= 0``) is the pure argmax — bit-identical to
+    sampling-free serving, no service, no leases.  Stochastic picking
+    builds one :class:`GumbelMaxSampler` (its own BlockService seeded
+    with the serve seed) and registers each batch row as the tenant
+    ``launch/serve/seq/<b>``; step ``i`` consumes counter window
+    ``[i * vocab, (i+1) * vocab)`` — replayable from (seed, step) alone.
+    """
+
+    def __init__(self, *, seed: int, batch: int, vocab: int,
+                 temperature: float, path: str = "fused"):
+        self.batch = batch
+        self.greedy = temperature <= 0.0
+        self.sampler = None
+        self._active = []
+        if not self.greedy:
+            self.sampler = GumbelMaxSampler.standalone(
+                seed=seed, vocab=vocab, capacity=batch,
+                spec=SamplingSpec(temperature=temperature), path=path)
+            for b in range(batch):
+                sid = f"{SAMPLER_TENANT}/seq/{b}"
+                tenant = self.sampler.registry.register(sid)
+                self._active.append((sid, tenant.tag(0)))
+
+    def pick(self, step: int, logits) -> jnp.ndarray:
+        """(batch, 1) int32 next tokens for decode step ``step``."""
+        if self.greedy:
+            return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        active = [ActiveSeq(slot=b, seq_id=sid, tenant_id=sid, tag=tag,
+                            position=step)
+                  for b, (sid, tag) in enumerate(self._active)]
+        flat = jnp.asarray(logits).reshape(self.batch, -1)
+        toks = self.sampler.sample_step(step, flat, active)
+        return jnp.asarray(toks)[:, None]
 
 
 def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
-          temperature: float = 0.0, rand: RandServer = None):
+          temperature: float = 0.0, sampler_path: str = "fused"):
     model = registry.build(cfg)
     params, _ = model.init(seed)
     pipe = pipeline_for(cfg, batch, max(prompt_len, 2), seed)
@@ -49,12 +76,6 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     prompts = {k: (v[:, :prompt_len] if k in ("tokens", "labels") else v)
                for k, v in b.items()}
     prompts.pop("labels", None)
-
-    own_rand = False
-    if temperature > 0.0 and rand is None:
-        # single in-process client: flush every request immediately
-        rand = RandServer(seed, config=ServerConfig(max_batch=1))
-        own_rand = True
 
     total_ctx = prompt_len + gen
     prefill = jax.jit(model.prefill)
@@ -68,23 +89,26 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     cache = _graft(cfg, cache, pcache, prompt_len)
     t_prefill = time.time() - t0
 
-    try:
-        tok = _pick(logits, rand, temperature)
-        out = [np.asarray(tok)]
-        t1 = time.time()
-        for i in range(gen - 1):
-            logits, cache = decode(params, cache, tok,
-                                   jnp.int32(prompt_len + i))
-            tok = _pick(logits, rand, temperature)
-            out.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t1
-    finally:
-        if own_rand:
-            rand.shutdown()      # drain the in-process sampler service
+    picker = TokenPicker(seed=seed, batch=batch,
+                         vocab=int(logits.shape[-1]),
+                         temperature=temperature, path=sampler_path)
+    tok = picker.pick(0, logits)
+    out = [np.asarray(tok)]
+    t1 = time.time()
+    for i in range(gen - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(prompt_len + i))
+        tok = picker.pick(i + 1, logits)
+        out.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t1
     toks = np.concatenate(out, axis=1)
-    return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
-                  "decode_tok_s": batch * (gen - 1) / max(t_decode, 1e-9)}
+    stats = {"prefill_s": t_prefill, "decode_s": t_decode,
+             "decode_tok_s": batch * (gen - 1) / max(t_decode, 1e-9)}
+    if picker.sampler is not None:
+        stats["sampler_calls_per_step"] = (
+            picker.sampler.stats()["calls_per_step"])
+    return toks, stats
 
 
 def _graft(cfg, cache, pcache, prompt_len):
@@ -120,16 +144,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0,
-                    help="0 = greedy; > 0 samples via per-step RandService "
-                         "uniform requests (tenant-attributed, journaled, "
-                         "replayable)")
+                    help="0 = greedy; > 0 samples via the inference "
+                         "tier's fused gumbel-max sampler (tenant-"
+                         "attributed, ledger-fenced, replayable)")
+    ap.add_argument("--sampler-path", choices=("fused", "xla", "ref"),
+                    default="fused")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
     toks, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                        gen=args.gen, temperature=args.temperature)
+                        gen=args.gen, temperature=args.temperature,
+                        sampler_path=args.sampler_path)
     print("generated shape:", toks.shape)
     print({k: round(v, 4) for k, v in stats.items()})
 

@@ -114,13 +114,17 @@ def regularized_gamma_p(shape: float, x: np.ndarray) -> np.ndarray:
     return np.clip(out, 0.0, 1.0)
 
 
-def continuous_cdf(kind: str, param: float, x: np.ndarray) -> np.ndarray:
+def continuous_cdf(kind: str, param, x: np.ndarray) -> np.ndarray:
     """Float64 CDF of a continuous distribution stage at ``x``."""
     x = np.asarray(x, dtype=np.float64)
     if kind == "exponential":
         return -np.expm1(-float(param) * np.maximum(x, 0.0))
     if kind == "gamma":
-        return regularized_gamma_p(float(param), x)
+        # two-parameter sugar: Gamma(k, theta) CDF is P(k, x / theta)
+        shape, scale = param if isinstance(param, tuple) else (param, 1.0)
+        return regularized_gamma_p(float(shape), x / float(scale))
+    if kind == "gumbel":
+        return np.exp(-np.exp(-x))
     raise ValueError(f"not a continuous stage: {kind!r}")
 
 
@@ -187,7 +191,7 @@ def pit_words(samples: np.ndarray, spec, v_bits: np.ndarray) -> np.ndarray:
         raise ValueError(
             f"v_bits must be uint32 of shape {x.shape}, got "
             f"{v.dtype}/{v.shape}")
-    if kind in ("exponential", "gamma"):
+    if kind in ("exponential", "gamma", "gumbel"):
         u = continuous_cdf(kind, param, x)
         j = np.minimum(np.floor(u * 2.0 ** 24),
                        2.0 ** 24 - 1.0).astype(np.uint32)

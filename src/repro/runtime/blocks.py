@@ -379,10 +379,46 @@ class BlockService:
         with self._lock:
             self._ledgers[lease.channel].commit(lease.lo, lease.hi)
 
-    def release(self, lease: Lease) -> None:
-        """Drop an unconsumed reservation (its window may be re-leased)."""
+    def release(self, lease) -> None:
+        """Drop an unconsumed reservation — or retire a whole channel.
+
+        With a :class:`Lease`, drops that reservation (its window may be
+        re-leased).  With a channel NAME (str), retires the channel —
+        the slot-churn primitive the inference tier's slot pool uses
+        when a sequence finishes:
+
+          * the channel's lease floor is fenced at its current
+            high-water mark, so when a later occupant re-opens the same
+            name (``open`` preserves the ledger of a retired channel)
+            every window it leases is strictly beyond anything the
+            previous occupant consumed — a retired-and-reused region can
+            never overlap a lease that was ever live;
+          * the ``Channel`` entry and its cached window executables are
+            dropped, so churn over many short-lived consumers does not
+            grow the channel table or the jit cache without bound;
+          * outstanding reservations refuse the retire (``LeaseError``)
+            — a live producer must be closed before its channel dies.
+        """
+        if isinstance(lease, str):
+            return self._release_channel(lease)
         with self._lock:
             self._ledgers[lease.channel].release(lease.lo, lease.hi)
+
+    def _release_channel(self, name: str) -> int:
+        with self._lock:
+            if name not in self._channels:
+                raise KeyError(f"channel {name!r} is not open; "
+                               f"have {sorted(self._channels)}")
+            led = self._ledgers[name]
+            if led.reserved:
+                raise LeaseError(
+                    f"channel {name!r} has {len(led.reserved)} live "
+                    f"reservation(s); close its producers before release")
+            led.floor = led.next
+            del self._channels[name]
+            for key in [k for k in self._window_fns if k[0] == name]:
+                del self._window_fns[key]
+            return led.floor
 
     # -- ledger checkpointing ---------------------------------------------
 

@@ -173,6 +173,25 @@ class TenantRegistry:
             t.requests = max(0, t.requests - 1)
         return t
 
+    def retire(self, tenant_id: str) -> Optional[Tenant]:
+        """Drop a tenant from the table, freeing its row (idempotent).
+
+        This is the sequence-churn primitive for the inference tier:
+        every live decode sequence is a tenant, and at millions of
+        finished sequences the registry must not grow without bound.
+        Retiring only removes the TABLE ROW — the id -> region map is a
+        pure hash, so re-registering the same id later lands on the
+        same region with fresh meters (counter-window disjointness
+        across the reuse is the lease ledger's job, not the registry's:
+        see ``BlockService.release(name)``).  Returns the retired
+        ``Tenant`` snapshot, or ``None`` if it was never registered.
+        """
+        with self._lock:
+            t = self._tenants.pop(tenant_id, None)
+            if t is not None:
+                self._by_region.pop(t.region_lo, None)
+            return t
+
     def usage(self) -> Dict[str, Dict[str, int]]:
         """Per-tenant accounting snapshot (JSON-able)."""
         with self._lock:
